@@ -1,0 +1,131 @@
+"""Analytic per-chip HBM-traffic model for the roofline memory term.
+
+XLA's ``cost_analysis()['bytes accessed']`` counts scan bodies once (same
+defect as its FLOPs — see hlo_analysis.py), and unrolling every cell for
+exact byte counts is not affordable at 512 devices, so the memory leg of
+the roofline is derived analytically from first principles.  Every term is
+a deliberate, documented over/under-approximation; EXPERIMENTS.md §Roofline
+cross-checks one small unrolled cell against XLA's numbers.
+
+All quantities are **bytes per chip per step**.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _mesh_factors(mesh) -> Dict[str, int]:
+    tp = mesh.shape.get("model", 1)
+    dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+    return {"tp": tp, "dp": dp, "chips": tp * dp}
+
+
+def kv_bytes_per_token_layer(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0                              # attention-free: no KV
+    if cfg.mla is not None:
+        m = cfg.mla
+        return (m.kv_lora_rank + m.qk_rope_head_dim
+                + m.kv_lora_rank) * BF16      # k payload + v payload
+    return 2 * cfg.n_kv_heads * cfg.resolved_head_dim * BF16
+
+
+def kv_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid.period
+    if cfg.family == "encdec":
+        return cfg.encdec.dec_layers
+    return cfg.n_layers
+
+
+def memory_bytes(arch: str, shape_name: str, mesh) -> Dict[str, float]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    f = _mesh_factors(mesh)
+    tp, dp, chips = f["tp"], f["dp"], f["chips"]
+    P = cfg.param_count()
+    d = cfg.d_model
+    L = cfg.n_layers
+
+    if shape.kind == "train":
+        toks_local = shape.global_batch * shape.seq_len / dp
+        # Weights: fwd read + remat re-read + bwd read (TP slice each).
+        w = 3 * BF16 * P / tp
+        # Gradients: written fp32 + read by the optimizer (TP slice).
+        g = 2 * F32 * P / tp
+        # Optimizer: m, v read+write + fp32 master read+write (ZeRO-1).
+        opt = 6 * F32 * P / chips
+        # Activations: ~16 d-wide tensors per layer per token (store +
+        # remat re-read, flash attention on-chip); MoE adds dispatch
+        # buffers ~ top_k routed copies.
+        c_act = 16
+        if cfg.moe:
+            c_act += 4 * cfg.moe.top_k
+        act = L * toks_local * d * BF16 * c_act
+        # Embedding + logits (vocab TP-sharded), fwd+bwd.
+        emb = 2 * toks_local * cfg.vocab_size / tp * BF16
+        total = w + g + opt + act + emb
+        return {"weights": w, "grads": g, "opt": opt, "act": act,
+                "emb": emb, "total": total}
+
+    if shape.kind == "prefill":
+        toks_local = shape.global_batch * shape.seq_len / dp
+        w = BF16 * P / tp
+        c_act = 8 + (2 * cfg.moe.top_k if cfg.moe else 0)
+        act = L * toks_local * d * BF16 * c_act
+        # KV pool writes: whole cache, page-sharded across all chips.
+        kvw = (shape.global_batch * shape.seq_len
+               * kv_bytes_per_token_layer(cfg) * kv_layers(cfg) / chips)
+        emb = toks_local * cfg.vocab_size / tp * BF16 / shape.seq_len
+        total = w + act + kvw + emb
+        return {"weights": w, "act": act, "kv_write": kvw, "emb": emb,
+                "total": total}
+
+    # decode
+    B_local = shape.global_batch / dp if shape.global_batch >= dp else \
+        shape.global_batch / chips  # long-context: work spread everywhere
+    # Weights: every chip multiplies against its TP slice once per token
+    # batch; MoE reads only experts that receive ≥1 token.
+    if cfg.moe:
+        dense_p = cfg.active_param_count() - (
+            (cfg.n_layers - cfg.moe.first_dense)
+            * 3 * d * cfg.moe.d_expert * cfg.moe.top_k)
+        expert_p = P - dense_p
+        B_tok = max(1.0, shape.global_batch / dp)
+        frac = min(1.0, B_tok * cfg.moe.top_k / cfg.moe.n_experts)
+        w = BF16 * (dense_p + expert_p * frac) / tp
+    else:
+        w = BF16 * P / tp
+    # KV read: context-parallel paged attention — the full cache streams
+    # once, split over all chips (the Mosaic pool's page shards).
+    kv = (shape.global_batch * (shape.seq_len + 1)
+          * kv_bytes_per_token_layer(cfg) * kv_layers(cfg) / chips)
+    if cfg.family == "encdec":
+        kv += (shape.global_batch * cfg.encdec.source_len
+               * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * BF16
+               * cfg.encdec.dec_layers / chips)
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_in = s.expand * d
+        nh = d_in // s.head_dim
+        state = cfg.n_layers * shape.global_batch * nh * s.head_dim \
+            * s.d_state * F32 * 2 / dp   # read+write recurrent state
+        kv += state
+    act = L * max(1.0, shape.global_batch / dp) * d * BF16 * 12
+    # logits: activations [B_local, V/tp] + unembed weight slice read once.
+    emb = max(1.0, shape.global_batch / dp) * cfg.vocab_size / tp * BF16 \
+        + cfg.vocab_size * d * BF16 / tp
+    total = w + kv + act + emb
+    return {"weights": w, "kv": kv, "act": act, "emb": emb, "total": total}

@@ -1,0 +1,271 @@
+"""Trip-count-aware HLO analysis: FLOPs + collective bytes from compiled HLO.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE,
+which silently under-reports a scanned-transformer's work by ~n_layers×.
+This module parses the compiled HLO text instead:
+
+  * splits it into computations and builds an op→shape symbol table;
+  * walks the call graph (ENTRY → fusions/calls/while bodies), carrying a
+    multiplier = product of enclosing ``known_trip_count``s;
+  * FLOPs: every ``dot`` op contributes 2·|out|·K·multiplier (K = product
+    of the LHS contracting dim sizes); convolutions are counted as dots of
+    their im2col shape (none of our models use them);
+  * collective bytes: ring *wire* cost per op, × multiplier.  Operand
+    bytes alone undercount: a ring all-gather of an s-byte shard over n
+    devices moves (n-1)·s per link; an all-reduce of a b-byte tensor
+    moves 2·b·(n-1)/n.  We parse each op's replica_groups to get n and
+    apply the standard ring-collective cost model:
+
+        all-reduce          2·(n-1)/n · operand
+        all-gather          (n-1)     · operand   (operand = shard)
+        reduce-scatter      (n-1)/n   · operand   (operand = full)
+        all-to-all          (n-1)/n   · operand
+        collective-permute  1         · operand
+
+The result is the per-*program* total (one SPMD partition — i.e. per chip).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"^([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLSITE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_GROUPS_ARR = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    """Devices per replica group of a collective op (1 if unparseable)."""
+    m = _GROUPS_ARR.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    """Ring-collective wire bytes per link, as a multiple of operand bytes."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        return float(n - 1)
+    if kind in ("reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def _parse_shape(s: str) -> Tuple[Optional[str], int]:
+    """'bf16[8,128]{...}' -> ('bf16', 1024). Tuples handled by caller."""
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return None, 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return dt, n
+
+
+def _shape_bytes(s: str) -> int:
+    dt, n = _parse_shape(s)
+    return n * _DTYPE_BYTES.get(dt, 0)
+
+
+class HloProgram:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._split(text)
+        self.shapes: Dict[str, str] = {}
+        self._build_symbols()
+
+    def _split(self, text: str) -> None:
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_HDR.match(line)
+            if m and ("{" in line):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                self.computations[cur].append(line)
+
+    def _build_symbols(self) -> None:
+        self.defs: Dict[str, str] = {}
+        for comp, lines in self.computations.items():
+            for line in lines:
+                m = _OP_RE.match(line)
+                if not m:
+                    continue
+                name, rhs = m.groups()
+                # rhs starts with the output shape (maybe a tuple).
+                self.shapes[name] = rhs.split(" ", 1)[0]
+                self.defs[name] = line
+
+    # CPU-backend correction: XLA:CPU's float-normalization pass upcasts
+    # every bf16 collective to f32 with a convert round-trip
+    # (f32 -> bf16 -> f32) because the CPU dot emitter has no native
+    # bf16.  On the TPU target the collective stays bf16, so wire bytes
+    # for such ops are counted at bf16 width.  The round-trip is the
+    # fingerprint: a fusion feeding the collective whose computation
+    # converts to bf16 and immediately back to f32.
+    _RT_BF16 = re.compile(r"=\s*bf16\[[^\]]*\]\{?[^}]*\}?\s*convert\(")
+    _RT_F32 = re.compile(r"=\s*f32\[[^\]]*\]\{?[^}]*\}?\s*convert\(%?convert")
+
+    def _bf16_payload(self, line: str) -> bool:
+        ops = re.search(r"(?:%s)[\w\-]*\(([^)]*)\)" %
+                        "|".join(COLLECTIVES), line)
+        if not ops:
+            return False
+        for a in ops.group(1).split(","):
+            a = a.strip().lstrip("%")
+            d = self.defs.get(a, "")
+            cm = re.search(r"calls=%?([\w.\-]+)", d)
+            if not cm:
+                return False
+            body = self.computations.get(cm.group(1), [])
+            has_rt = (any(self._RT_BF16.search(x) for x in body)
+                      and any(self._RT_F32.search(x) for x in body))
+            if not has_rt:
+                return False
+        return True
+
+    # ------------------------------------------------------------ walker
+
+    def multipliers(self) -> Dict[str, float]:
+        """computation -> product of enclosing trip counts (from ENTRY)."""
+        mult: Dict[str, float] = {}
+        if self.entry is None:
+            # fall back: treat every computation as top-level
+            return {c: 1.0 for c in self.computations}
+
+        def visit(comp: str, m: float):
+            if m <= mult.get(comp, 0.0):
+                return
+            mult[comp] = m
+            for line in self.computations.get(comp, []):
+                trip = 1.0
+                tm = _TRIP_RE.search(line)
+                is_while = " while(" in line or "= while(" in line
+                if tm and is_while:
+                    trip = float(tm.group(1))
+                for callee in _CALLSITE_RE.findall(line):
+                    if callee in self.computations:
+                        visit(callee, m * (trip if is_while else 1.0))
+
+        visit(self.entry, 1.0)
+        return mult
+
+    # ------------------------------------------------------------ flops
+
+    def _dot_flops(self, line: str, comp: str) -> float:
+        m = _OP_RE.match(line)
+        if m is None:
+            return 0.0
+        out_shape = m.group(2).split(" ", 1)[0]
+        _, out_n = _parse_shape(out_shape)
+        # operands
+        ops = re.search(r"dot\(([^)]*)\)", line)
+        if not ops:
+            return 0.0
+        args = [a.strip().lstrip("%") for a in ops.group(1).split(",")]
+        lhs = args[0] if args else None
+        lhs_shape = self.shapes.get(lhs, "")
+        mm = _SHAPE_RE.match(lhs_shape)
+        if not mm:
+            return 0.0
+        lhs_dims = [int(d) for d in mm.group(2).split(",") if d]
+        c = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        k = 1
+        if c and c.group(1):
+            for idx in c.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+        return 2.0 * out_n * k
+
+    def totals(self, pod_group_sizes=()) -> Dict[str, float]:
+        """``pod_group_sizes``: replica-group sizes whose groups span the
+        pod (DCN) boundary on the current mesh — their wire bytes are
+        additionally accumulated in ``dcn_bytes`` (DCN links are an order
+        of magnitude slower than ICI; EXPERIMENTS.md reports the split
+        for the multi-pod cells)."""
+        mult = self.multipliers()
+        flops = 0.0
+        dcn = 0.0
+        coll: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+        for comp, lines in self.computations.items():
+            m = mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for line in lines:
+                if " dot(" in line:
+                    flops += m * self._dot_flops(line, comp)
+                else:
+                    for kind in COLLECTIVES:
+                        if f" {kind}(" in line or f"{kind}-start(" in line:
+                            nbytes = self._collective_bytes(line)
+                            n = _group_size(line)
+                            w = _wire_factor(kind, n)
+                            if self._bf16_payload(line):
+                                w *= 0.5   # TPU keeps this collective bf16
+                            coll[kind] += m * nbytes * w
+                            if n in pod_group_sizes:
+                                dcn += m * nbytes * w
+                            break
+        coll_total = sum(coll.values())
+        return {"flops": flops, "collective_bytes": coll_total,
+                "collectives": coll, "dcn_bytes": dcn}
+
+    def _collective_bytes(self, line: str) -> int:
+        m = _OP_RE.match(line)
+        if not m:
+            return 0
+        # Prefer operand bytes (payload moved); fall back to output shape.
+        ops = re.search(r"(?:%s)[\w\-]*\(([^)]*)\)" %
+                        "|".join(COLLECTIVES), line)
+        total = 0
+        if ops:
+            for a in ops.group(1).split(","):
+                a = a.strip().lstrip("%")
+                if a in self.shapes:
+                    total += _shape_bytes(self.shapes[a])
+        if total == 0:
+            out = m.group(2).split(" ", 1)[0]
+            if out.startswith("("):
+                for part in re.findall(r"[a-z0-9]+\[[\d,]*\]", out):
+                    total += _shape_bytes(part)
+            else:
+                total = _shape_bytes(out)
+        return total
+
+
+def analyze_hlo(text: str, pod_group_sizes=()) -> Dict[str, float]:
+    return HloProgram(text).totals(pod_group_sizes)

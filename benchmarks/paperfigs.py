@@ -1,0 +1,220 @@
+"""Paper-figure reproductions (Figs. 1, 5, 6, 7, 8 of the MICRO'17 paper).
+
+Shared machinery: build multi-application workloads through the *real*
+allocators (CoCoA vs the GPU-MMU baseline), translate the traces, and run
+the Table-1 TLB/paging timing simulator.  Each ``fig*`` function returns a
+list of result-dict rows and asserts the paper's headline claim for that
+figure (soft check — prints PASS/FAIL rather than raising, so the full
+suite always reports).
+
+Scale knobs: the paper simulates 235 workloads for ~10^9 cycles each; we
+default to a representative subset sized for minutes on CPU and keep the
+full-scale settings one flag away (--full).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.tlb_sim import AppResult, SimConfig, TranslationSim, \
+    weighted_speedup
+from repro.core.workloads import (
+    APP_NAMES,
+    build_workload,
+    heterogeneous_names,
+    homogeneous_names,
+)
+
+
+def _run(names: Sequence[str], manager_kind: str, *, mode: str,
+         ideal: bool = False, paging: bool = True, warm: bool = False,
+         seed: int = 0, n_access: int = 4000):
+    traces, mgr = build_workload(names, manager_kind, seed=seed,
+                                 n_access=n_access)
+    sim = TranslationSim(SimConfig(mode=mode, ideal=ideal, paging=paging,
+                                   warm=warm), traces)
+    res = sim.run()
+    return res, sim, mgr
+
+
+def _alone_ipc_cache() -> Dict[str, float]:
+    return {}
+
+
+_ALONE: Dict[tuple, float] = {}
+
+
+def alone_ipc(app: str, n_access: int) -> float:
+    """IPC_alone: the app running by itself on the baseline manager.
+
+    Steady-state window (warm=True): over the paper's ~1e9-cycle horizon
+    cold faults amortize to noise; in our scaled window they would
+    dominate and mask the translation effects Figs. 5/6/8 measure.
+    The paging axis is measured explicitly by Figs. 1 and 7.
+    """
+    key = (app, n_access)
+    if key not in _ALONE:
+        res, _, _ = _run([app], "gpu-mmu", mode="base", warm=True,
+                         n_access=n_access)
+        _ALONE[key] = res[0].ipc
+    return _ALONE[key]
+
+
+def ws_of(shared: List[AppResult], n_access: int) -> float:
+    return float(sum(r.ipc / max(alone_ipc(r.name, n_access), 1e-12)
+                     for r in shared))
+
+
+# ------------------------------------------------------------------ figures
+
+
+def fig1_translation_overhead(n_access=4000, apps=("bfs", "spmv", "lulesh",
+                                                   "kmeans")):
+    """Fig. 1: 4KB vs 2MB pages vs ideal TLB (no demand-paging cost)."""
+    rows = []
+    for app in apps:
+        names = homogeneous_names(app, 2)
+        perf = {}
+        for label, mode, ideal in (("4KB", "base", False),
+                                   ("2MB", "large", False),
+                                   ("ideal", "base", True)):
+            res, _, _ = _run(names, "gpu-mmu", mode=mode, ideal=ideal,
+                             paging=False, n_access=n_access)
+            perf[label] = float(np.sum([r.ipc for r in res]))
+        rows.append({
+            "bench": "fig1", "app": app,
+            "perf_4k_norm": perf["4KB"] / perf["ideal"],
+            "perf_2m_norm": perf["2MB"] / perf["ideal"],
+        })
+    m4 = np.mean([r["perf_4k_norm"] for r in rows])
+    m2 = np.mean([r["perf_2m_norm"] for r in rows])
+    # Paper: 4KB loses ~48.1% vs ideal; 2MB comes within ~2%.
+    ok = (m4 < 0.75) and (m2 > 0.9)
+    rows.append({"bench": "fig1", "app": "MEAN", "perf_4k_norm": m4,
+                 "perf_2m_norm": m2, "claim_4k_much_worse": ok})
+    return rows
+
+
+def fig5_homogeneous(n_access=4000, apps=("spmv", "bfs", "kmeans"),
+                     counts=(1, 2, 3, 4, 5)):
+    """Fig. 5: homogeneous weighted speedup, GPU-MMU vs Mosaic vs Ideal."""
+    rows = []
+    gains, gaps = [], []
+    for app in apps:
+        for n in counts:
+            names = homogeneous_names(app, n)
+            res_b, _, _ = _run(names, "gpu-mmu", mode="base", warm=True,
+                               n_access=n_access)
+            res_m, _, _ = _run(names, "mosaic", mode="mosaic", warm=True,
+                               n_access=n_access)
+            res_i, _, _ = _run(names, "gpu-mmu", mode="base", ideal=True,
+                               warm=True, n_access=n_access)
+            ws_b, ws_m, ws_i = (ws_of(r, n_access)
+                                for r in (res_b, res_m, res_i))
+            rows.append({"bench": "fig5", "app": app, "napps": n,
+                         "ws_gpummu": ws_b, "ws_mosaic": ws_m,
+                         "ws_ideal": ws_i})
+            if n > 1:
+                gains.append(ws_m / ws_b - 1)
+                gaps.append(1 - ws_m / ws_i)
+    rows.append({"bench": "fig5", "app": "MEAN", "napps": 0,
+                 "mosaic_gain_over_gpummu": float(np.mean(gains)),
+                 "gap_to_ideal": float(np.mean(gaps)),
+                 # Paper: +55.5% avg gain, within 6.8% of ideal.
+                 "claim_large_gain": bool(np.mean(gains) > 0.2),
+                 "claim_near_ideal": bool(np.mean(gaps) < 0.2)})
+    return rows
+
+
+def fig6_heterogeneous(n_access=4000, n_workloads=6, counts=(2, 3, 4, 5)):
+    """Fig. 6: heterogeneous weighted speedup (random app mixes)."""
+    rows = []
+    gains, gaps = [], []
+    w = 0
+    for k in counts:
+        for rep in range(max(1, n_workloads // len(counts))):
+            names = heterogeneous_names(k, seed=w)
+            w += 1
+            res_b, _, _ = _run(names, "gpu-mmu", mode="base", warm=True,
+                               n_access=n_access, seed=w)
+            res_m, _, _ = _run(names, "mosaic", mode="mosaic", warm=True,
+                               n_access=n_access, seed=w)
+            res_i, _, _ = _run(names, "gpu-mmu", mode="base", ideal=True,
+                               warm=True, n_access=n_access, seed=w)
+            ws_b, ws_m, ws_i = (ws_of(r, n_access)
+                                for r in (res_b, res_m, res_i))
+            rows.append({"bench": "fig6", "apps": "+".join(names),
+                         "napps": k, "ws_gpummu": ws_b, "ws_mosaic": ws_m,
+                         "ws_ideal": ws_i})
+            gains.append(ws_m / ws_b - 1)
+            gaps.append(1 - ws_m / ws_i)
+    rows.append({"bench": "fig6", "apps": "MEAN", "napps": 0,
+                 "mosaic_gain_over_gpummu": float(np.mean(gains)),
+                 "gap_to_ideal": float(np.mean(gaps)),
+                 # Paper: +29.7% avg, within 15.4% of ideal.
+                 "claim_gain": bool(np.mean(gains) > 0.1)})
+    return rows
+
+
+def fig7_demand_paging(n_access=8000, apps=("dct", "gaussian", "hotspot")):
+    """Fig. 7: GPU-MMU / Mosaic vs GPU-MMU *without* demand paging."""
+    rows = []
+    for app in apps:
+        names = homogeneous_names(app, 2)
+        res_np, _, _ = _run(names, "gpu-mmu", mode="base", paging=False,
+                            n_access=n_access)
+        res_b, _, _ = _run(names, "gpu-mmu", mode="base", paging=True,
+                           n_access=n_access)
+        res_m, _, _ = _run(names, "mosaic", mode="mosaic", paging=True,
+                           n_access=n_access)
+        base = ws_of(res_np, n_access)
+        rows.append({
+            "bench": "fig7", "app": app,
+            "gpummu_paging_norm": ws_of(res_b, n_access) / base,
+            "mosaic_paging_norm": ws_of(res_m, n_access) / base,
+        })
+    mg = np.mean([r["mosaic_paging_norm"] for r in rows])
+    bg = np.mean([r["gpummu_paging_norm"] for r in rows])
+    rows.append({"bench": "fig7", "app": "MEAN",
+                 "gpummu_paging_norm": float(bg),
+                 "mosaic_paging_norm": float(mg),
+                 # Paper: Mosaic beats GPU-MMU-no-paging by ~58.5% (homog);
+                 # paging overhead itself is small.
+                 "claim_mosaic_beats_nopaging": bool(mg > 1.0)})
+    return rows
+
+
+def fig8_tlb_hitrate(n_access=4000, apps=("spmv", "bfs", "shoc-spmv"),
+                     counts=(2, 3, 4, 5)):
+    """Fig. 8: L1/L2 TLB hit rates and the baseline's interference slide."""
+    rows = []
+    for app in apps:
+        for n in counts:
+            names = homogeneous_names(app, n)
+            _, sim_b, _ = _run(names, "gpu-mmu", mode="base", warm=True,
+                               n_access=n_access)
+            _, sim_m, _ = _run(names, "mosaic", mode="mosaic", warm=True,
+                               n_access=n_access)
+            rows.append({
+                "bench": "fig8", "app": app, "napps": n,
+                "l1_gpummu": sim_b.l1_hit_rate_micro(),
+                "l1_mosaic": sim_m.l1_hit_rate_micro(),
+                "l2_gpummu": sim_b.l2_hit_rate(),
+                "l2_mosaic": sim_m.l2_hit_rate(),
+            })
+    l1m = np.mean([r["l1_mosaic"] for r in rows])
+    # Baseline degradation with app count (slope over n for each app).
+    slide = np.mean([
+        rows[i + len(counts) - 1]["l2_gpummu"] - rows[i]["l2_gpummu"]
+        for i in range(0, len(rows), len(counts))
+    ])
+    rows.append({"bench": "fig8", "app": "MEAN", "napps": 0,
+                 "l1_mosaic_mean": float(l1m),
+                 "l2_gpummu_slide_2to5": float(slide),
+                 # Paper: Mosaic miss rate < 1%; baseline slides 81%→62%.
+                 "claim_mosaic_sub1pct_miss": bool(l1m > 0.99),
+                 "claim_baseline_slides": bool(slide < 0.0)})
+    return rows

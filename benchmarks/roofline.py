@@ -1,0 +1,82 @@
+"""Roofline table builder (deliverable g).
+
+Reads the dry-run JSONL (launch/dryrun.py --out) and renders the
+per-(arch x shape x mesh) roofline table for EXPERIMENTS.md §Roofline:
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+usefulness ratio, and per-device memory fit.
+
+Run the dry-run first (its own process — device-count env var):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out dryrun_all.jsonl
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_all.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("{"):
+                rows.append(json.loads(line))
+    # Last record wins per cell (re-runs append).
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.2f}ms"
+    return f"{x * 1e6:6.1f}us"
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24} {'shape':12} {'mesh':8} {'compute':>9} "
+           f"{'memory':>9} {'collective':>11} {'bound':>10} "
+           f"{'useful':>7} {'roofline%':>9} {'peakGB':>7} fit")
+    out = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        terms = {k: r[k] for k in ("compute_s", "memory_s", "collective_s")}
+        dom = max(terms, key=terms.get)
+        # roofline fraction: compute term / dominant term (how close the
+        # step is to being compute-bound at peak).
+        roof = terms["compute_s"] / max(terms[dom], 1e-30)
+        peak = r["per_device_bytes"]["peak"] if isinstance(
+            r["per_device_bytes"], dict) else r["per_device_bytes"]
+        fit = "OK" if peak <= HBM_PER_CHIP else "OVER"
+        uf = r.get("useful_flops_frac")
+        out.append(
+            f"{r['arch']:24} {r['shape']:12} {r['mesh']:8} "
+            f"{fmt_s(terms['compute_s']):>9} {fmt_s(terms['memory_s']):>9} "
+            f"{fmt_s(terms['collective_s']):>11} {dom[:-2]:>10} "
+            f"{(uf if uf else 0):7.3f} {100 * roof:8.1f}% "
+            f"{peak / 1e9:6.2f} {fit}")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:] or ["dryrun_all.jsonl"])[0]
+    rows = load(path)
+    print(table(rows))
+    n_over = sum(1 for r in rows if (r["per_device_bytes"]["peak"]
+                 if isinstance(r["per_device_bytes"], dict)
+                 else r["per_device_bytes"]) > HBM_PER_CHIP)
+    print(f"\n{len(rows)} cells; {n_over} exceed {HBM_PER_CHIP / 1e9:.0f} GB"
+          " HBM/chip")
+
+
+if __name__ == "__main__":
+    main()

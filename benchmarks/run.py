@@ -1,0 +1,84 @@
+"""Benchmark driver: one suite per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
+
+Suites:
+  fig1     4KB vs 2MB vs ideal-TLB translation overhead   (paper Fig. 1)
+  fig5     homogeneous weighted speedup                   (paper Fig. 5)
+  fig6     heterogeneous weighted speedup                 (paper Fig. 6)
+  fig7     demand-paging on/off                           (paper Fig. 7)
+  fig8     L1/L2 TLB hit rates + interference             (paper Fig. 8)
+  kernels  paged-attention granularity + CAC copy cost    (beyond paper)
+  pagesize TPU-native page-size trade-off                 (paper §1)
+  serving  Mosaic vs GPU-MMU on the serving engine        (Figs. 5/6 analogue)
+  roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
+
+Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        print("  " + ",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller traces (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args(argv)
+    n = 2000 if args.fast else 4000
+
+    from benchmarks import kernel_bench, paperfigs, serving_bench
+
+    suites = {
+        "fig1": lambda: paperfigs.fig1_translation_overhead(n_access=n),
+        "fig5": lambda: paperfigs.fig5_homogeneous(n_access=n),
+        "fig6": lambda: paperfigs.fig6_heterogeneous(n_access=n),
+        "fig7": lambda: paperfigs.fig7_demand_paging(n_access=2 * n),
+        "fig8": lambda: paperfigs.fig8_tlb_hitrate(n_access=n),
+        "kernels": lambda: (kernel_bench.paged_attention_granularity()
+                            + kernel_bench.page_compact_cost()),
+        "pagesize": kernel_bench.pagesize_sweep,
+        "serving": serving_bench.serving_compare,
+    }
+    picked = (args.only.split(",") if args.only else list(suites))
+
+    claims = []
+    for name in picked:
+        t0 = time.time()
+        print(f"=== {name}", flush=True)
+        rows = _emit(suites[name]())
+        for r in rows:
+            for k, v in r.items():
+                if k.startswith("claim_"):
+                    claims.append((name, k, bool(v)))
+        print(f"  ({time.time() - t0:.1f}s)", flush=True)
+
+    if os.path.exists("dryrun_all.jsonl") and (args.only is None
+                                               or "roofline" in picked):
+        print("=== roofline (from dryrun_all.jsonl)", flush=True)
+        from benchmarks import roofline
+        roofline.main(["dryrun_all.jsonl"])
+
+    print("\n=== claim summary")
+    ok = True
+    for suite, claim, passed in claims:
+        print(f"  {suite:8} {claim:32} {'PASS' if passed else 'FAIL'}")
+        ok = ok and passed
+    print("ALL CLAIMS PASS" if ok else "SOME CLAIMS FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

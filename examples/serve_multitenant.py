@@ -1,0 +1,65 @@
+"""Multi-tenant serving on the Mosaic pool — the paper's setting as an
+LLM-serving system.
+
+Three tenants submit batched requests to one engine sharing one physical
+KV pool.  The run reports, per manager (mosaic vs gpu-mmu baseline):
+tokens/s, coalesced fraction (TLB-reach analogue), CAC compaction traffic,
+and verifies the outputs are bit-identical — the manager is
+application-transparent, the paper's headline property.
+
+    PYTHONPATH=src python examples/serve_multitenant.py --requests 10
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.serving.engine import Request, ServingEngine
+
+
+def run(manager_kind: str, n_requests: int, seed: int):
+    cfg = get_smoke_config("qwen2.5-3b")
+    geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
+    eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
+                        manager_kind=manager_kind, seed=seed)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        T = int(rng.integers(16, 72))
+        reqs.append(Request(
+            rid=i, tenant=i % 3,
+            prompt=rng.integers(0, cfg.vocab_size, T).astype(np.int32),
+            max_new=int(rng.integers(4, 12))))
+    for r in reqs:
+        eng.submit(r)
+    steps = eng.run_until_drained()
+    return eng, reqs, steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    results = {}
+    for kind in ("mosaic", "gpu-mmu"):
+        eng, reqs, steps = run(kind, args.requests, args.seed)
+        st = eng.cache.stats()
+        print(f"[{kind:8}] {steps} engine steps | "
+              f"{eng.stats.tok_per_s():7.1f} tok/s (CPU) | "
+              f"coalesced {eng.stats.coalesced_mean:5.1%} | "
+              f"CAC copies {eng.stats.compaction_copies} | "
+              f"bloat {st.get('memory_bloat', 1):.2f}")
+        results[kind] = {r.rid: tuple(r.out) for r in reqs}
+
+    same = results["mosaic"] == results["gpu-mmu"]
+    print(f"\napplication-transparency: outputs identical across managers "
+          f"= {same}")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

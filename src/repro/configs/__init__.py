@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+``ARCHS`` maps the assignment's architecture ids to config modules; each
+module defines the exact published ``CONFIG`` plus a reduced
+``smoke_config()`` of the same family for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    EncDecConfig,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    PoolGeometry,
+    ShapeConfig,
+    SHAPES,
+    SSMConfig,
+    TrainHParams,
+)
+
+ARCHS: Dict[str, str] = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(ARCHS[arch]).smoke_config()
+
+
+__all__ = [
+    "ARCHS", "list_archs", "get_config", "get_smoke_config",
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "EncDecConfig", "ShapeConfig", "SHAPES", "PoolGeometry", "TrainHParams",
+]

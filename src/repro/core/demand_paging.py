@@ -1,0 +1,106 @@
+"""Demand paging: host-DRAM ↔ HBM base-page transfers.
+
+Paper §1: demand paging transfers a page over the system I/O bus when a
+thread touches an unallocated page; Mosaic's point is that transfers stay at
+*base-page* granularity even when translation uses large pages, so a fault
+never over-fetches.
+
+TPU adaptation (DESIGN.md §2): the "system I/O bus" is the host↔device link
+(PCIe on TPU hosts too).  The serving engine keeps cold KV pages in host
+DRAM (prefix caches, preempted requests, >HBM working sets) and faults them
+in at base-page granularity.  This module tracks residency and batches the
+faults of one engine step into a single gather-transfer (one device_put per
+step rather than per page), which is how a real TPU host would amortize
+launch overhead.
+
+Latency accounting mirrors the paper's PCIe model (measured GTX 1080 curves:
+fixed setup cost + per-byte cost) so the TLB/paging simulator and the real
+engine agree on what a fault costs; see :mod:`repro.core.tlb_sim`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """System I/O bus latency model (paper §3: modeled from GTX 1080).
+
+    latency(bytes) = setup_us + bytes / bandwidth_gbps
+    """
+
+    setup_us: float = 10.0          # per-transfer fixed cost (driver+DMA setup)
+    bandwidth_GBps: float = 12.0    # effective PCIe 3.0 x16 ≈ 12 GB/s
+
+    def transfer_us(self, nbytes: int) -> float:
+        return self.setup_us + nbytes / (self.bandwidth_GBps * 1e3)
+
+
+@dataclasses.dataclass
+class FaultBatch:
+    """One engine-step's worth of page faults, batched for transfer."""
+
+    ppns: List[int]
+    page_bytes: int
+    link: LinkModel
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.ppns) * self.page_bytes
+
+    @property
+    def transfer_us(self) -> float:
+        if not self.ppns:
+            return 0.0
+        # Base pages belonging to the same coalesced frame are physically
+        # contiguous (CoCoA), so they merge into one DMA; scattered pages pay
+        # one setup each.  This is where contiguity helps *transfer* too.
+        return self.link.transfer_us(self.nbytes)
+
+
+class ResidencyTracker:
+    """Tracks which physical pages are HBM-resident vs host-only."""
+
+    def __init__(self, num_pages: int, page_bytes: int, link: LinkModel | None = None):
+        self.resident = np.zeros(num_pages, dtype=bool)
+        self.page_bytes = page_bytes
+        self.link = link or LinkModel()
+        self.stats = {"faults": 0, "fault_batches": 0, "bytes_in": 0,
+                      "evictions": 0, "bytes_out": 0, "transfer_us": 0.0}
+
+    def touch(self, ppns: Sequence[int]) -> List[int]:
+        """Mark pages as about-to-be-accessed; return the non-resident ones."""
+        missing = [p for p in ppns if not self.resident[p]]
+        return missing
+
+    def fault_in(self, ppns: Sequence[int]) -> FaultBatch:
+        """Batch-fault pages in; marks them resident and accounts transfer."""
+        missing = [p for p in ppns if not self.resident[p]]
+        for p in missing:
+            self.resident[p] = True
+        batch = FaultBatch(missing, self.page_bytes, self.link)
+        if missing:
+            self.stats["faults"] += len(missing)
+            self.stats["fault_batches"] += 1
+            self.stats["bytes_in"] += batch.nbytes
+            self.stats["transfer_us"] += batch.transfer_us
+        return batch
+
+    def evict(self, ppns: Sequence[int]) -> int:
+        n = 0
+        for p in ppns:
+            if self.resident[p]:
+                self.resident[p] = False
+                n += 1
+        self.stats["evictions"] += n
+        self.stats["bytes_out"] += n * self.page_bytes
+        return n
+
+    def release(self, ppns: Sequence[int]) -> None:
+        """Pages freed by the allocator: drop residency without transfer."""
+        for p in ppns:
+            self.resident[p] = False

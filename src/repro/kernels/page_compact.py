@@ -1,0 +1,75 @@
+"""CAC page-copy kernel: batched on-device base-page migration.
+
+Executes a compaction plan's ``CopyOp`` list in one launch: grid over the
+copy list; each step DMAs one base page pool[src[i]] → pool[dst[i]] through
+VMEM, with both sides addressed via scalar-prefetched index maps.  Holes
+(src/dst = -1) are rewritten to a *duplicate* of the first valid copy op —
+duplicates are idempotent because CAC only copies live pages into free
+slots (a src page is never also a dst page), so the kernel stays total
+without the hole ever clobbering a real destination.  If every op is a
+hole, the plan degenerates to copying page 0 onto itself, which is safe
+precisely because then nothing else writes.
+
+The paper models compaction as a whole-GPU stall (worst case); this kernel
+is the real cost: len(plan) page-sized DMAs, overlappable between decode
+steps.  ``benchmarks/kernel_bench.py`` measures it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(src_ref, dst_ref, pool_in_ref, pool_out_ref):
+    pool_out_ref[...] = pool_in_ref[...]
+
+
+def page_compact(pool, src, dst, *, interpret: bool = True):
+    """pool [NP, ptok, kv, dh]; src/dst int32 [n].  Returns updated pool.
+
+    input_output_aliasing keeps this in-place on the real device: only the
+    touched pages move.
+    """
+    n = src.shape[0]
+    if n == 0:
+        return pool
+    NP = pool.shape[0]
+    blk = (1, *pool.shape[1:])
+
+    # Rewrite holes to duplicates of the first valid op (see module doc).
+    valid = (src >= 0) & (dst >= 0)
+    first = jnp.argmax(valid)                      # 0 when no valid op
+    any_valid = jnp.any(valid)
+    src = jnp.where(valid, src, jnp.where(any_valid, src[first], 0))
+    dst = jnp.where(valid, dst, jnp.where(any_valid, dst[first], 0))
+
+    def in_index(i, src, dst):
+        return (src[i], *([0] * (len(blk) - 1)))
+
+    def out_index(i, src, dst):
+        return (dst[i], *([0] * (len(blk) - 1)))
+
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n,),
+            in_specs=[pl.BlockSpec(blk, in_index)],
+            out_specs=pl.BlockSpec(blk, out_index),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(src, dst, pool)
+    if interpret:
+        # The interpreter does not emulate in-place aliasing of unwritten
+        # output blocks; merge untouched pages back (TPU path skips this).
+        touched = (jnp.zeros((NP,), jnp.int32).at[jnp.maximum(dst, 0)]
+                   .add((dst >= 0).astype(jnp.int32))) > 0
+        out = jnp.where(touched[:, None, None, None], out, pool)
+    return out

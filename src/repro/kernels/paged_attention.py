@@ -1,0 +1,189 @@
+"""Dual-granularity paged decode attention — the Mosaic "hardware" half.
+
+Two Pallas TPU kernels share one flash-accumulator structure; both emit
+*unnormalized* (o, m, l) partials so their results can be flash-combined
+with each other and across page shards:
+
+  * ``frames`` kernel — the **coalesced fast path** (paper: the 2MB TLB
+    entry).  A coalesced large frame is ``frame_pages`` physically
+    contiguous, aligned base pages, so the whole frame streams HBM→VMEM as
+    ONE BlockSpec block per grid step via ONE scalar-prefetched index
+    (frame table).  16× fewer table lookups and long contiguous DMAs.
+
+  * ``pages`` kernel — the **splintered path** (the 4KB base-page walk).
+    One base page per grid step, one table lookup per page, short
+    scattered DMAs.  This is what 100% of traffic pays under the
+    GPU-MMU baseline; under Mosaic only the un-coalesced tail pays it.
+
+Both use ``PrefetchScalarGridSpec`` so the page/frame table drives the
+BlockSpec ``index_map`` — the TPU-native analogue of the paper's
+hardware page-table walk: translation happens in the DMA descriptor
+stream, and its *cost* is the number of descriptors (table entries)
+consumed per KV byte.
+
+Grid: (batch, n_blocks) with the KV axis iterated sequentially
+("arbitrary") per sequence; the flash accumulator lives in VMEM scratch
+and is flushed on the last block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_step(q, k, v, valid, m_s, l_s, o_s, *, first: bool):
+    """One flash-accumulation step over a KV slab.
+
+    q [kv, g, dh]; k [t, kv, dh]; v [t, kv, dh_v]; valid [t] bool.
+    Scratch m_s/l_s [kv, g]; o_s [kv, g, dh_v]  (all fp32).
+    """
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)            # [kv, g, t]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m_blk = s.max(axis=-1)
+    if first:
+        m_new = m_blk
+        alpha = jnp.zeros_like(m_blk)                  # kill stale scratch
+    else:
+        m_new = jnp.maximum(m_s[...], m_blk)
+        alpha = jnp.exp(m_s[...] - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l_new = (0.0 if first else l_s[...] * alpha) + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)            # [kv, g, dh_v]
+    o_new = (0.0 if first else o_s[...] * alpha[..., None]) + pv
+    m_s[...] = m_new
+    l_s[...] = l_new
+    o_s[...] = o_new
+
+
+def _paged_kernel(tables_ref, ntok_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, m_s, l_s, o_s, *,
+                  tokens_per_block: int, scale: float):
+    """Shared body for both granularities.
+
+    Block shapes (leading batch block of 1 squeezed by indexing):
+      q_ref [1, kv, g, dh]; k_ref [1, T, kv, dh]; v_ref [1, T, kv, dh_v]
+      (T = tokens_per_block: one page or one whole frame)
+      outputs: o_ref [1, kv, g, dh_v]; m_ref/l_ref [1, kv, g]
+    """
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    nt = ntok_ref[pl.program_id(0), blk]
+    valid = jax.lax.broadcasted_iota(
+        jnp.int32, (tokens_per_block,), 0) < nt
+
+    @pl.when(blk == 0)
+    def _init():
+        _flash_step(q, k, v, valid, m_s, l_s, o_s, first=True)
+
+    @pl.when(blk != 0)
+    def _acc():
+        _flash_step(q, k, v, valid, m_s, l_s, o_s, first=False)
+
+    @pl.when(blk == nblk - 1)
+    def _flush():
+        o_ref[0] = o_s[...]
+        m_ref[0] = m_s[...]
+        l_ref[0] = l_s[...]
+
+
+def paged_attention_kernel(
+    q, pool_k, pool_v, tables, ntok, *,
+    granularity: str,            # 'page' | 'frame'
+    frame_pages: int = 16,
+    scale: float = 1.0,
+    interpret: bool = True,
+):
+    """Launch one granularity's kernel.
+
+    q [B, H, dh]; pool_k/v [NP, ptok, kv, dh{,_v}];
+    tables [B, n_blocks] (page ids or frame ids; -1 holes);
+    ntok [B, n_blocks] valid tokens per block.
+    Returns unnormalized (o [B,H,dh_v] f32, m [B,H] f32, l [B,H] f32).
+    """
+    B, H, dh = q.shape
+    NP, ptok, n_kv, _ = pool_k.shape
+    dh_v = pool_v.shape[-1]
+    g = H // n_kv
+    nblocks = tables.shape[1]
+    if granularity == "frame":
+        pages_per_block = frame_pages
+    else:
+        pages_per_block = 1
+    tpb = pages_per_block * ptok
+
+    # View pools as [NP // pages_per_block, tpb, kv, dh]: one block = one
+    # page or one aligned frame (contiguous slab — the Mosaic fast path).
+    pk = pool_k.reshape(NP // pages_per_block, tpb, n_kv, dh)
+    pv = pool_v.reshape(NP // pages_per_block, tpb, n_kv, dh_v)
+    qg = q.reshape(B, n_kv, g, dh)
+
+    def q_index(b, blk, tables, ntok):
+        return (b, 0, 0, 0)
+
+    def kv_index(b, blk, tables, ntok):
+        return (jnp.maximum(tables[b, blk], 0), 0, 0, 0)
+
+    def out_index(b, blk, tables, ntok):
+        return (b, 0, 0)
+
+    def out_index4(b, blk, tables, ntok):
+        return (b, 0, 0, 0)
+
+    grid = (B, nblocks)
+    kernel = functools.partial(
+        _paged_kernel, tokens_per_block=tpb, scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, n_kv, g, dh), q_index),
+                pl.BlockSpec((1, tpb, n_kv, dh), kv_index),
+                pl.BlockSpec((1, tpb, n_kv, dh_v), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, n_kv, g, dh_v), out_index4),
+                pl.BlockSpec((1, n_kv, g), out_index),
+                pl.BlockSpec((1, n_kv, g), out_index),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g, dh_v), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, g, dh_v), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, ntok, qg, pk, pv)
+    return (o.reshape(B, H, dh_v), m.reshape(B, H), l.reshape(B, H))
+
+
+def combine_granularities(parts):
+    """Flash-combine [(o, m, l), ...] partials from both kernels."""
+    os, ms, ls = zip(*parts)
+    m_g = functools.reduce(jnp.maximum, ms)
+    l_g = sum(l * jnp.exp(m - m_g) for m, l in zip(ms, ls))
+    o_g = sum(o * jnp.exp(m - m_g)[..., None] for m, o in zip(ms, os))
+    return o_g, m_g, l_g

@@ -1,0 +1,61 @@
+"""Pure-JNP oracles for every Pallas kernel in this package.
+
+The model code in :mod:`repro.models` *is* the production pure-JAX path
+(used by the CPU dry-run); these wrappers expose the exact same math with
+kernel-shaped signatures so tests can sweep shapes/dtypes and
+``assert_allclose`` kernel vs. oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as _attention
+from repro.models.paged import (
+    combine_partials,
+    paged_attention_local,
+)
+
+
+def paged_attention_ref(q, pool_k, pool_v, tables, ntok, *, scale):
+    """Unnormalized (o, m, l) over a set of pages — oracle for both
+    granularities of :mod:`repro.kernels.paged_attention` (a frame is just
+    its constituent pages)."""
+    return paged_attention_local(q, pool_k, pool_v, tables, ntok,
+                                 scale=scale)
+
+
+def paged_attention_full_ref(q, pool_k, pool_v, tables, ntok, *, scale):
+    """Normalized single-shard paged attention."""
+    o, m, l = paged_attention_local(q, pool_k, pool_v, tables, ntok,
+                                    scale=scale)
+    return combine_partials(o, m, l, ())
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                        scale=None):
+    """Oracle for the training flash-attention kernel."""
+    return _attention(q, k, v, causal=causal, q_offset=q_offset,
+                      kv_len=kv_len, scale=scale)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk, h0=None):
+    """Oracle for the Mamba-2 SSD chunked-scan kernel."""
+    from repro.models.mamba2 import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk, h0=h0)
+
+
+def page_compact_ref(pool, src, dst):
+    """Oracle for the CAC page-copy kernel: pool[dst[i]] = pool[src[i]].
+
+    Entries with src or dst == -1 are no-ops.
+    """
+    valid = (src >= 0) & (dst >= 0)
+    s = jnp.maximum(src, 0)
+    d = jnp.where(valid, dst, pool.shape[0])      # scatter-drop for holes
+    moved = pool[s]
+    padded = jnp.concatenate(
+        [pool, jnp.zeros((1, *pool.shape[1:]), pool.dtype)], axis=0)
+    out = padded.at[d].set(moved)
+    return out[:-1]

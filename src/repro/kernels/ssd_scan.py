@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (arXiv:2405.21060 §6).
+
+Grid: (batch, heads, n_chunks) — batch/head blocks are parallel, the
+chunk axis is sequential ("arbitrary") and carries the running
+[head_dim, d_state] recurrent state in a VMEM scratch accumulator, so the
+inter-chunk linear recurrence never round-trips HBM.  Per step the kernel
+does three MXU matmuls on one chunk:
+
+    scores = (C B^T) ⊙ exp(segsum)        [Q, Q]   (the "duality" term)
+    y      = scores · (dt x) + (C h^T) ⊙ exp(cum)  [Q, hd]
+    h'     = diag(exp(cum_last)) h + (dt x ⊙ decay)^T B   [hd, N]
+
+Shapes are chosen MXU-friendly by the model (Q = chunk = 256, hd = 64,
+N = 128).  ``repro.models.mamba2.ssd_chunked`` is the pure-JNP oracle;
+``tests/test_kernels.py`` sweeps shapes/dtypes against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hout_ref, h_acc):
+    c_idx = pl.program_id(2)
+    Q = x_ref.shape[1]
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_acc[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, hd]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+
+    xdt = x * dt[:, None]
+    cum = jnp.cumsum(dt * A)                         # [Q]
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Ldec = jnp.exp(jnp.where(ii >= jj, seg, NEG_INF))
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * Ldec   # [Q, Q]
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # Off-diagonal (carried-state) term.
+    h = h_acc[...]                                   # [hd, N]
+    y = y + jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # State update.
+    decay = jnp.exp(cum[-1] - cum)                   # [Q]
+    h_new = h * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xdt * decay[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_acc[...] = h_new
+    hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, h0=None,
+             interpret: bool = True):
+    """Chunked SSD scan. x [B,T,nh,hd]; dt [B,T,nh] (post-softplus);
+    A [nh] (negative); Bm/Cm [B,T,nh,N]; h0 [B,nh,hd,N] or None.
+    Returns (y [B,T,nh,hd] f32, h_final [B,nh,hd,N] f32).
+    """
+    Bsz, T, nh, hd = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hd, N), jnp.float32)
+
+    grid = (Bsz, nh, nc)
+    y, h_last = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, T, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, h0)
+    return y, h_last

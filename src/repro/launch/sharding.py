@@ -1,0 +1,202 @@
+"""Parameter/optimizer sharding rules (TP + EP + ZeRO-1).
+
+Specs are matched by parameter *name* against trailing dimensions, so the
+same rule covers a stacked ``[L, ...]`` tensor, a hybrid's ``[G, P, ...]``
+grouping, or an unstacked shared block.  Megatron-style pairing: column
+-parallel (heads / ffn-hidden / experts) then row-parallel back, one
+all-reduce per pair; embeddings are vocab-sharded.
+
+``zero1_specs`` extends each param's spec with the data axes on the
+largest still-unsharded (and divisible) dim — applied to optimizer moments
+and used by the trainer for ZeRO-1 state partitioning.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# name -> trailing-dims spec (leading dims padded with None).
+_TRAILING_RULES: Dict[str, Tuple] = {
+    # embeddings
+    "embed": ("model", None),
+    "unembed": (None, "model"),
+    "frontend_proj": (None, None),
+    # attention (GQA): column-parallel QKV, row-parallel O
+    "wq": (None, "model", None),
+    "wk": (None, "model", None),
+    "wv": (None, "model", None),
+    "wo": ("model", None, None),
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # MLA
+    "w_dkv": (None, None),
+    "w_kr": (None, None),
+    "kv_norm": (None,),
+    "w_uk": (None, "model", None),
+    "w_uv": (None, "model", None),
+    # dense FFN
+    "w_gate": (None, "model"),
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    # MoE (EP: experts over model axis; router replicated)
+    "router": (None, None),
+    "ws_gate": (None, "model"),
+    "ws_up": (None, "model"),
+    "ws_down": ("model", None),
+    # Mamba2 (head-major inner dim sharded; scalars replicated)
+    "w_in": (None, "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "norm_w": ("model",),
+    "w_out": ("model", None),
+}
+
+# MoE expert tensors carry an extra leading E dim that is itself sharded.
+_MOE_EXPERT_RULES: Dict[str, Tuple] = {
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _leaf_name(path) -> Tuple[str, Tuple[str, ...]]:
+    keys = tuple(
+        k.key if hasattr(k, "key") else str(k) for k in path)
+    return keys[-1], keys
+
+
+def spec_for(path, leaf, mesh) -> P:
+    name, keys = _leaf_name(path)
+    names = set(mesh.axis_names)
+    in_moe = "moe" in keys
+    rule = None
+    if in_moe and name in _MOE_EXPERT_RULES:
+        rule = _MOE_EXPERT_RULES[name]
+    elif name in _TRAILING_RULES:
+        rule = _TRAILING_RULES[name]
+    if rule is None:
+        return P()
+    nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if nd < len(rule):
+        return P()
+    full = (None,) * (nd - len(rule)) + tuple(rule)
+    # Drop axes absent from the mesh or non-divisible dims.
+    shape = leaf.shape
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None or ax not in names or dim % mesh.shape[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def param_specs(params, mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf, mesh), params)
+
+
+def zero1_extend(spec: P, shape, mesh) -> P:
+    """Add the data axes to the largest unsharded divisible dim (ZeRO-1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp:
+        return spec
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # Prefer the largest dim with no axis yet.
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if entries[i] is None and shape[i] % dp_size == 0:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+        if entries[i] is not None and not isinstance(entries[i], tuple):
+            ax = entries[i]
+            if shape[i] % (mesh.shape[ax] * dp_size) == 0:
+                entries[i] = (ax, *dp)
+                return P(*entries)
+    return spec
+
+
+def zero1_specs(params, mesh):
+    base = param_specs(params, mesh)
+    return jax.tree.map(
+        lambda leaf, sp: zero1_extend(sp, leaf.shape, mesh), params, base)
+
+
+def fsdp_spec_for(shape, mesh) -> P:
+    """ZeRO-3: shard the largest divisible dim over every mesh axis.
+
+    Falls back to progressively smaller axis subsets (drop 'pod', then
+    'data') so awkward dims (e.g. vocab not divisible by 512) still shard
+    as much as possible; fully replicated only as a last resort.
+    """
+    axes_all = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    for drop in range(len(axes_all)):
+        axes = axes_all[drop:]
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % n == 0 and shape[i] >= n:
+                entries = [None] * len(shape)
+                entries[i] = axes if len(axes) > 1 else axes[0]
+                return P(*entries)
+    return P()
+
+
+def fsdp_specs(params, mesh):
+    """Pytree of fully-sharded (ZeRO-3) PartitionSpecs."""
+    return jax.tree.map(lambda leaf: fsdp_spec_for(leaf.shape, mesh),
+                        params)
+
+
+# Serving layout for MoE expert tensors: 2D EP — experts over 'data',
+# expert-hidden over 'model' (see models/moe.py::ep2d_geometry).  All
+# other params keep the TP rules (bf16, replicated over data).
+_MOE_EXPERT_SERVING_RULES: Dict[str, Tuple] = {
+    "w_gate": ("data", None, "model"),
+    "w_up": ("data", None, "model"),
+    "w_down": ("data", "model", None),
+}
+
+
+def serving_param_specs(params, mesh, ep2d: bool):
+    """Param specs for inference; ``ep2d`` switches expert tensors to the
+    2D expert-parallel layout."""
+    base = param_specs(params, mesh)
+    if not ep2d:
+        return base
+
+    def override(path, leaf, spec):
+        name, keys = _leaf_name(path)
+        if "moe" in keys and name in _MOE_EXPERT_SERVING_RULES:
+            rule = _MOE_EXPERT_SERVING_RULES[name]
+            nd = leaf.ndim
+            full = (None,) * (nd - len(rule)) + tuple(rule)
+            names = set(mesh.axis_names)
+            out = []
+            for dim, ax in zip(leaf.shape, full):
+                ok = (ax is not None and ax in names
+                      and dim % mesh.shape[ax] == 0)
+                out.append(ax if ok else None)
+            return P(*out)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(override, params, base)
+
+
+def shardings_of(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,295 @@
+"""Input/parameter ShapeDtypeStruct builders for the dry-run and launchers.
+
+``input_specs(arch, shape, mesh)`` returns everything needed to lower the
+cell: abstract params, abstract inputs, in/out shardings — no device
+allocation (weak-type-correct SDS stand-ins only).
+
+Serving geometry (DESIGN.md §5): page_tokens=64, frame_pages=16.  A
+sequence's frames are striped over the page shards (``model`` axis when the
+batch is data-sharded; every mesh axis for the single-sequence long-context
+shape), so ``S`` and ``mpps`` below are mesh-dependent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, PoolGeometry, ShapeConfig
+from repro.models.lm import LM
+from repro.models.transformer import PageCtx
+from repro.launch.sharding import param_specs, zero1_specs
+
+GEO = PoolGeometry(page_tokens=64, frame_pages=16, headroom=1.25)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]) or 1)
+
+
+def abstract_params(lm: LM):
+    return jax.eval_shape(lambda k: lm.init(k), jax.random.PRNGKey(0))
+
+
+@dataclasses.dataclass
+class ServePlan:
+    """Mesh-dependent paging geometry for one decode/prefill cell."""
+
+    batch_sharded: bool
+    S: int                 # page shards a sequence stripes over (tables dim)
+    mpps: int              # max pages per (sequence, shard)
+    np_global: int         # total pool pages (all pool shards)
+    page_axes: Tuple[str, ...]   # table stripe / combine axes
+    pool_axes: Tuple[str, ...]   # physical pool page-dim sharding
+
+
+def serve_plan(shape: ShapeConfig, mesh) -> ServePlan:
+    geo = GEO
+    ftok = geo.frame_pages * geo.page_tokens
+    model = mesh.shape.get("model", 1)
+    dp = _dp_size(mesh)
+    pool_axes = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+    n_pool_shards = int(np.prod([mesh.shape[a] for a in pool_axes]))
+    batch_sharded = shape.global_batch % dp == 0 and shape.global_batch >= dp
+    if batch_sharded:
+        page_axes = tuple(a for a in ("model",) if a in mesh.axis_names)
+        S = model
+        n_cells = dp              # independent (data-shard) sub-pools
+        seqs_per_cell = shape.global_batch // dp
+    else:
+        page_axes = pool_axes
+        S = n_pool_shards
+        n_cells = 1
+        seqs_per_cell = shape.global_batch
+    # +1 token for the in-flight decode position.
+    frames_per_seq = math.ceil((shape.seq_len + 1) / ftok)
+    mpps = math.ceil(frames_per_seq / S) * geo.frame_pages
+    # Capacity per (cell, model-stripe): worst-stripe frames per sequence
+    # x sequences in the cell x headroom.
+    frames_per_stripe = math.ceil(
+        math.ceil(frames_per_seq / S) * seqs_per_cell * geo.headroom)
+    np_global = frames_per_stripe * geo.frame_pages * S * n_cells
+    return ServePlan(batch_sharded, S, mpps, np_global, page_axes,
+                     pool_axes)
+
+
+def _frontend_inputs(cfg: ModelConfig, B: int, T_src: Optional[int] = None):
+    out = {}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["src_embeds"] = sds((B, T_src or cfg.encdec.source_len,
+                                 cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _ctx_specs(B: int, plan: ServePlan):
+    i32 = jnp.int32
+    return PageCtx(
+        tables=sds((B, plan.S, plan.mpps), i32),
+        ntok=sds((B, plan.S, plan.mpps), i32),
+        wpage=sds((B, plan.S), i32),
+        wslot=sds((B,), i32),
+        batch_sharded=plan.batch_sharded,
+    )
+
+
+def _ctx_shardings(mesh, plan: ServePlan, bs):
+    pa = plan.page_axes if plan.page_axes else None
+    return PageCtx(
+        tables=NamedSharding(mesh, P(bs, pa, None)),
+        ntok=NamedSharding(mesh, P(bs, pa, None)),
+        wpage=NamedSharding(mesh, P(bs, pa)),
+        wslot=NamedSharding(mesh, P(bs)),
+        batch_sharded=plan.batch_sharded,
+    )
+
+
+def _pool_shardings(mesh, plan: ServePlan, pools_sds):
+    pa = plan.pool_axes if plan.pool_axes else None
+
+    def shard_one(s):
+        # [L, NP, ptok, kv, dh] → pages over every mesh axis (each
+        # (data, model) cell owns a private sub-pool; see PageCtx.pool_axes).
+        return NamedSharding(mesh, P(None, pa, *([None] * (len(s.shape) - 2))))
+
+    return tuple(shard_one(s) for s in pools_sds)
+
+
+def _state_shardings(cfg, mesh, state_sds, bs):
+    out = {}
+    for k, s in state_sds.items():
+        if k in ("ssm", "conv"):
+            out[k] = NamedSharding(mesh, P(None, bs,
+                                           *([None] * (len(s.shape) - 2))))
+        elif k in ("cross_k", "cross_v"):
+            # [L, B, src, kv, dh]: batch over dp, kv heads over model.
+            kv_ax = ("model" if s.shape[3] % mesh.shape.get("model", 1) == 0
+                     else None)
+            out[k] = NamedSharding(mesh, P(None, bs, None, kv_ax, None))
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               hp=None) -> Dict[str, Any]:
+    """Everything needed to lower one (arch × shape × mesh) cell.
+
+    Returns dict with: kind, fn (to jit), args (SDS tree),
+    in_shardings, out_shardings (or None), donate.
+    """
+    from repro.configs.base import TrainHParams
+    from repro.models.common import set_batch_axes
+    from repro.train.trainer import (
+        configure_parallelism,
+        make_train_step,
+        state_specs,
+    )
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    lm = LM(cfg)
+    hp = hp or TrainHParams(remat="block")
+    params_sds = abstract_params(lm)
+
+    if shape.kind == "train":
+        from repro.train.optimizer import adamw_init
+        from repro.models.common import set_serving_mode
+
+        set_serving_mode(False)
+        configure_parallelism(hp)
+        bdp = tuple(a for a in (("pod", "data", "model")
+                                if hp.parallelism == "fsdp"
+                                else ("pod", "data"))
+                    if a in mesh.axis_names)
+        bs = bdp if bdp else None
+        pspec, mspec = state_specs(params_sds, hp, mesh)
+        pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                              is_leaf=lambda x: isinstance(x, P))
+        mshard = jax.tree.map(lambda s: NamedSharding(mesh, s), mspec,
+                              is_leaf=lambda x: isinstance(x, P))
+
+        B, T = shape.global_batch, shape.seq_len
+        step_fn, _ = make_train_step(lm, hp, mesh)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        oshard = {"step": NamedSharding(mesh, P()),
+                  "mu": mshard, "nu": mshard}
+        batch = {"tokens": sds((B, T), jnp.int32),
+                 **_frontend_inputs(cfg, B)}
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(bs, *([None] * (len(s.shape) - 1)))),
+            batch)
+        ef_sds = None
+        if hp.grad_compress:
+            from repro.train.grad_compress import padded_size
+            ef_sds = jax.tree.map(
+                lambda q: sds((padded_size(int(np.prod(q.shape)),
+                                           _dp_size(mesh)),),
+                              jnp.float32), params_sds)
+
+        def train_fn(p, o, ef, b):
+            new_p, new_o, _, m = step_fn(p, o, ef, b)
+            return new_p, new_o, m["loss"]
+
+        ef_shard = (jax.tree.map(lambda s: NamedSharding(mesh, P()), ef_sds)
+                    if ef_sds is not None else None)
+        return dict(
+            kind="train",
+            fn=train_fn,
+            args=(params_sds, opt_sds, ef_sds, batch),
+            in_shardings=(pshard, oshard, ef_shard, bshard),
+            donate=(0, 1),
+        )
+
+    # Serving shapes (always megatron-style: model axis = page stripes/TP).
+    # Params: bf16, TP-sharded, REPLICATED over data — never ZeRO-extended.
+    # A data-extended layout would re-gather every layer's weights every
+    # decode step (measured 42 GB wire/step on llama3 decode_32k —
+    # EXPERIMENTS.md §Perf decode iteration 1); inference reads weights
+    # once per token, so they must live resident per TP shard.  MoE
+    # expert tensors use the 2D-EP layout when it applies (dbrx's 254 GB
+    # of experts cannot replicate over data; models/moe.py).
+    from repro.launch.sharding import serving_param_specs
+    from repro.models.common import set_serving_mode
+    from repro.models.moe import ep2d_geometry
+
+    set_batch_axes(("pod", "data"))
+    set_serving_mode(True)
+    dp = _dp_axes(mesh)
+    bs = dp if dp else None
+    params_sds = jax.tree.map(
+        lambda s: sds(s.shape, jnp.bfloat16
+                      if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        params_sds)
+    ep2d = ep2d_geometry(cfg, mesh) is not None
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          serving_param_specs(params_sds, mesh, ep2d),
+                          is_leaf=lambda x: isinstance(x, P))
+    plan = serve_plan(shape, mesh)
+    B = shape.global_batch
+    pools_sds = lm.pool_shapes(plan.np_global, GEO.page_tokens)
+    pool_shard = (_pool_shardings(mesh, plan, pools_sds)
+                  if pools_sds else None)
+    ctx = _ctx_specs(B, plan)
+    ctx_shard = _ctx_shardings(mesh, plan, bs if plan.batch_sharded else None)
+
+    if shape.kind == "prefill":
+        T = shape.seq_len
+        batch = {"tokens": sds((B, T), jnp.int32),
+                 **_frontend_inputs(cfg, B)}
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(bs, *([None] * (len(s.shape) - 1)))),
+            batch)
+        last_pos = sds((B,), jnp.int32)
+
+        def prefill_fn(p, b, pools, ctx, last_pos):
+            return lm.prefill(p, b, pools, ctx, last_pos)
+
+        return dict(
+            kind="prefill",
+            fn=prefill_fn,
+            args=(params_sds, batch, pools_sds, ctx, last_pos),
+            in_shardings=(pshard, bshard, pool_shard, ctx_shard,
+                          NamedSharding(mesh, P(bs))),
+            donate=(2,),
+            plan=plan,
+        )
+
+    # decode
+    bsd = bs if plan.batch_sharded else None
+    state_sds = lm.init_state_shapes(
+        B, src_len=(cfg.encdec.source_len if cfg.encdec else 0))
+    st_shard = _state_shardings(cfg, mesh, state_sds, bsd)
+    tokens = sds((B,), jnp.int32)
+    pos = sds((B,), jnp.int32)
+
+    def decode_fn(p, t, pos, pools, ctx, st):
+        return lm.decode_step(p, t, pos, pools, ctx, st)
+
+    return dict(
+        kind="decode",
+        fn=decode_fn,
+        args=(params_sds, tokens, pos, pools_sds, ctx, state_sds),
+        in_shardings=(pshard, NamedSharding(mesh, P(bsd)),
+                      NamedSharding(mesh, P(bsd)), pool_shard, ctx_shard,
+                      st_shard),
+        donate=(3,),
+        plan=plan,
+    )

@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Builds the mesh for whatever devices this process has (or the production
+mesh under a TPU runtime), instantiates the fault-tolerant Trainer, and
+runs. Restart the same command after a failure/preemption: ``--resume``
+restores the newest complete checkpoint and re-shards it onto the
+surviving device count (elastic restart; see train/checkpoint.py).
+
+CPU example (smoke-scale):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --smoke --steps 50 --batch 4 --seq 64 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.configs.base import TrainHParams
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default="save_collectives",
+                    choices=["none", "block", "save_collectives"])
+    ap.add_argument("--parallelism", default="megatron",
+                    choices=["megatron", "auto", "fsdp"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 (requires 256 devices)")
+    args = ap.parse_args()
+
+    from repro.train.trainer import Trainer
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    hp = TrainHParams(lr=args.lr, total_steps=args.steps,
+                      microbatch=args.microbatch, remat=args.remat,
+                      parallelism=args.parallelism)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    print(f"arch={cfg.name} params~{cfg.param_count() / 1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} parallelism={hp.parallelism}")
+    tr = Trainer(cfg, hp, mesh, batch_per_step=args.batch,
+                 seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                 ckpt_every=args.ckpt_every, resume=args.resume)
+    tr.run(args.steps)
+
+
+if __name__ == "__main__":
+    main()

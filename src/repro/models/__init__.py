@@ -1,0 +1,6 @@
+"""Model zoo: pure-JAX implementations of the 10 assigned architectures."""
+
+from repro.models.lm import LM
+from repro.models.transformer import PageCtx
+
+__all__ = ["LM", "PageCtx"]

@@ -1,0 +1,166 @@
+"""Encoder–decoder stack (seamless-m4t-large-v2 backbone).
+
+Encoder: bidirectional transformer over stub audio-frame embeddings.
+Decoder: causal self-attention (Mosaic-paged at decode) + cross-attention
+to the encoder memory.  Cross K/V are computed once per layer at prefill
+and cached densely — an en-masse, read-only allocation that would be 100%
+coalesced in the pool (kept dense for clarity; noted in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import shd, split_keys
+from repro.models.layers import attention, rms_norm
+from repro.models.transformer import (
+    DP,
+    PageCtx,
+    attn_block_decode,
+    attn_block_train,
+    init_attn_params,
+    init_ffn_params,
+    ffn_block,
+    prefill_write_op,
+)
+
+def _dense_view(cfg: ModelConfig, L: int) -> ModelConfig:
+    return dataclasses.replace(cfg, n_layers=L, moe=None, mla=None)
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    e = cfg.encdec
+    ks = split_keys(key, 6)
+    enc = {
+        "ln1": jnp.ones((e.enc_layers, cfg.d_model)),
+        "ln2": jnp.ones((e.enc_layers, cfg.d_model)),
+        "attn": init_attn_params(ks[0], cfg, e.enc_layers),
+        "mlp": init_ffn_params(ks[1], cfg, e.enc_layers),
+    }
+    dec = {
+        "ln1": jnp.ones((e.dec_layers, cfg.d_model)),
+        "ln_cross": jnp.ones((e.dec_layers, cfg.d_model)),
+        "ln2": jnp.ones((e.dec_layers, cfg.d_model)),
+        "attn": init_attn_params(ks[2], cfg, e.dec_layers),
+        "cross": init_attn_params(ks[3], cfg, e.dec_layers),
+        "mlp": init_ffn_params(ks[4], cfg, e.dec_layers),
+    }
+    return {"encoder": enc, "decoder": dec,
+            "enc_norm": jnp.ones((cfg.d_model,))}
+
+
+def encoder_apply(cfg: ModelConfig, params, src, *, remat: bool = True):
+    """src [B,S,d] stub frame embeddings -> memory [B,S,d]."""
+    positions = jnp.broadcast_to(
+        jnp.arange(src.shape[1])[None], src.shape[:2])
+
+    def layer(cfg, lp, x):
+        a, _, _ = attn_block_train(cfg, lp["attn"],
+                                   rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                   positions, causal=False)
+        x = x + a
+        f = ffn_block(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return shd(x + f, DP, None, None)
+
+    def body(x, lp):
+        fn = jax.checkpoint(layer, static_argnums=(0,)) if remat else layer
+        return fn(cfg, lp, x), None
+
+    x, _ = jax.lax.scan(body, src, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ModelConfig, cp, memory):
+    """Per-layer cross K/V from encoder memory: [B,S,Hkv,dh] each."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, cp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, cp["wv"])
+    return k, v
+
+
+def _cross_attend(cfg: ModelConfig, cp, h, ck, cv):
+    """h [B,T,d] queries against cached cross K/V."""
+    q = jnp.einsum("btd,dhk->bthk", h, cp["wq"])
+    q = shd(q, DP, None, "model", None)
+    o = attention(q, ck, cv, causal=False)
+    o = shd(o, DP, None, "model", None)
+    return jnp.einsum("bthd,hdk->btk", o, cp["wo"])
+
+
+def decoder_stack_train(cfg: ModelConfig, params, x, positions, memory, *,
+                        remat: bool = True):
+    def layer(cfg, lp, x):
+        a, _, _ = attn_block_train(cfg, lp["attn"],
+                                   rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                   positions)
+        x = x + a
+        ck, cv = _cross_kv(cfg, lp["cross"], memory)
+        c = _cross_attend(cfg, lp["cross"],
+                          rms_norm(x, lp["ln_cross"], cfg.norm_eps), ck, cv)
+        x = x + c
+        f = ffn_block(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return shd(x + f, DP, None, None)
+
+    def body(x, lp):
+        fn = jax.checkpoint(layer, static_argnums=(0,)) if remat else layer
+        return fn(cfg, lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return x
+
+
+def decoder_stack_prefill(cfg: ModelConfig, params, x, positions, memory,
+                          pools, ctx: PageCtx):
+    """Returns (x, pools', cross_kv [L,...] cache for decode)."""
+    k_pools, v_pools = pools
+
+    def body(carry, inp):
+        x = carry
+        l, lp = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, k, v = attn_block_train(cfg, lp["attn"], h, positions)
+        kp, vp = prefill_write_op(k, v, k_pools[l], v_pools[l], ctx)
+        x = x + a
+        ck, cv = _cross_kv(cfg, lp["cross"], memory)
+        c = _cross_attend(cfg, lp["cross"],
+                          rms_norm(x, lp["ln_cross"], cfg.norm_eps), ck, cv)
+        x = x + c
+        f = ffn_block(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return shd(x + f, DP, None, None), (kp, vp, ck, cv)
+
+    L = k_pools.shape[0]
+    x, (kp, vp, ck, cv) = jax.lax.scan(
+        body, x, (jnp.arange(L), params["decoder"]))
+    return x, (kp, vp), (ck, cv)
+
+
+def decoder_stack_decode(cfg: ModelConfig, params, x, pos, pools, ctx,
+                         cross_kv):
+    k_pools, v_pools = pools
+    cks, cvs = cross_kv
+
+    def body(carry, inp):
+        x, kps, vps = carry
+        l, lp = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kp, vp = attn_block_decode(cfg, lp["attn"], h, pos,
+                                      kps[l], vps[l], ctx)
+        x = x + a
+        c = _cross_attend(cfg, lp["cross"],
+                          rms_norm(x, lp["ln_cross"], cfg.norm_eps),
+                          cks[l], cvs[l])
+        x = x + c
+        f = ffn_block(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        x = x + f
+        kps = kps.at[l].set(kp)
+        vps = vps.at[l].set(vp)
+        return (x, kps, vps), None
+
+    L = k_pools.shape[0]
+    (x, k_pools, v_pools), _ = jax.lax.scan(
+        body, (x, k_pools, v_pools), (jnp.arange(L), params["decoder"]))
+    return x, (k_pools, v_pools)

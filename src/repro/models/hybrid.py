@@ -1,0 +1,184 @@
+"""Zamba2-style hybrid: Mamba2 backbone + shared attention block.
+
+``n_layers`` Mamba2 blocks; after every ``period`` of them, a *single
+shared* transformer block (attention + MLP, identical weights each
+invocation) runs — its KV cache is Mosaic-paged, with one pool slice per
+invocation (the activations differ per call even though weights are
+shared).  The published model adds per-invocation LoRA deltas to the shared
+block; we share weights exactly (disclosed in the config docstring).
+
+Layout: groups of ``period`` mamba layers are scanned (params stacked
+[G, period, ...]); the shared block runs eagerly between groups (G is
+small); leftover mamba layers (n_layers % period) form a trailing scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import shd, split_keys
+from repro.models.layers import rms_norm
+from repro.models.mamba2 import (
+    init_mamba_params,
+    mamba_block_decode,
+    mamba_block_train,
+)
+from repro.models.transformer import (
+    DP,
+    PageCtx,
+    attn_block_decode,
+    attn_block_train,
+    ffn_block,
+    init_attn_params,
+    init_ffn_params,
+    prefill_write_op,
+)
+
+
+def group_shape(cfg: ModelConfig) -> Tuple[int, int, int]:
+    period = cfg.hybrid.period
+    G = cfg.n_layers // period
+    leftover = cfg.n_layers - G * period
+    return G, period, leftover
+
+
+def n_invocations(cfg: ModelConfig) -> int:
+    return group_shape(cfg)[0]
+
+
+def init_hybrid_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    G, period, leftover = group_shape(cfg)
+    ks = split_keys(key, 5)
+    grouped = init_mamba_params(ks[0], cfg, G * period)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, period, *a.shape[1:]), grouped)
+    p: Dict[str, Any] = {
+        "mamba_ln": jnp.ones((G, period, cfg.d_model)),
+        "mamba": grouped,
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,)),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "attn": jax.tree.map(lambda a: a[0],
+                                 init_attn_params(ks[1], cfg, 1)),
+            "mlp": jax.tree.map(lambda a: a[0],
+                                init_ffn_params(ks[2], cfg, 1)),
+        },
+    }
+    if leftover:
+        p["tail_ln"] = jnp.ones((leftover, cfg.d_model))
+        p["tail"] = init_mamba_params(ks[3], cfg, leftover)
+    return p
+
+
+def _mamba_scan_train(cfg, lns, lps, x):
+    def body(x, inp):
+        ln, lp = inp
+        y = mamba_block_train(cfg, lp, rms_norm(x, ln, cfg.norm_eps))
+        return shd(x + y, DP, None, None), None
+
+    x, _ = jax.lax.scan(body, x, (lns, lps))
+    return x
+
+
+def _shared_block_train(cfg, sp, x, positions, *, pools=None, ctx=None,
+                        inv=None):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    a, k, v = attn_block_train(cfg, sp["attn"], h, positions)
+    if pools is not None:
+        kp, vp = prefill_write_op(k, v, pools[0][inv], pools[1][inv], ctx)
+        pools = (pools[0].at[inv].set(kp), pools[1].at[inv].set(vp))
+    x = x + a
+    f = ffn_block(cfg, sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return shd(x + f, DP, None, None), pools
+
+
+def hybrid_stack_train(cfg: ModelConfig, params, x, positions, *,
+                       pools=None, ctx: PageCtx = None):
+    """Train/prefill path.  If pools given, prefill-writes shared-block KV."""
+    G, period, leftover = group_shape(cfg)
+    for g in range(G):
+        lps = jax.tree.map(lambda a: a[g], params["mamba"])
+        x = _mamba_scan_train(cfg, params["mamba_ln"][g], lps, x)
+        x, pools = _shared_block_train(cfg, params["shared"], x, positions,
+                                       pools=pools, ctx=ctx, inv=g)
+    if leftover:
+        x = _mamba_scan_train(cfg, params["tail_ln"], params["tail"], x)
+    return x, pools
+
+
+def _mamba_scan_prefill(cfg, lns, lps, x):
+    def body(x, inp):
+        ln, lp = inp
+        y, (h, conv) = mamba_block_train(
+            cfg, lp, rms_norm(x, ln, cfg.norm_eps), return_state=True)
+        return shd(x + y, DP, None, None), (h, conv)
+
+    return jax.lax.scan(body, x, (lns, lps))
+
+
+def hybrid_stack_prefill(cfg: ModelConfig, params, x, positions, pools,
+                         ctx: PageCtx):
+    """Returns (x, pools', ssm_states [L,...], conv_states [L,...])."""
+    G, period, leftover = group_shape(cfg)
+    hs_all, conv_all = [], []
+    for g in range(G):
+        lps = jax.tree.map(lambda a: a[g], params["mamba"])
+        x, (hs, convs) = _mamba_scan_prefill(cfg, params["mamba_ln"][g],
+                                             lps, x)
+        hs_all.append(hs)
+        conv_all.append(convs)
+        x, pools = _shared_block_train(cfg, params["shared"], x, positions,
+                                       pools=pools, ctx=ctx, inv=g)
+    if leftover:
+        x, (hs, convs) = _mamba_scan_prefill(cfg, params["tail_ln"],
+                                             params["tail"], x)
+        hs_all.append(hs)
+        conv_all.append(convs)
+    return (x, pools, jnp.concatenate(hs_all, axis=0),
+            jnp.concatenate(conv_all, axis=0))
+
+
+def hybrid_stack_decode(cfg: ModelConfig, params, x, pos, pools, ctx,
+                        ssm_state, conv_state):
+    """Decode: recurrent mamba updates + paged shared-block attention.
+
+    ssm_state [L, B, nh, hd, N]; conv_state [L, B, d_conv-1, conv_dim];
+    pools: (k [G, NP, ...], v [G, NP, ...]).
+    """
+    G, period, leftover = group_shape(cfg)
+    k_pools, v_pools = pools
+    l = 0
+    for g in range(G):
+        for j in range(period):
+            lp = jax.tree.map(lambda a: a[g, j], params["mamba"])
+            h = rms_norm(x, params["mamba_ln"][g, j], cfg.norm_eps)
+            y, s_new, c_new = mamba_block_decode(
+                cfg, lp, h, ssm_state[l], conv_state[l])
+            ssm_state = ssm_state.at[l].set(s_new)
+            conv_state = conv_state.at[l].set(c_new)
+            x = x + y
+            l += 1
+        sp = params["shared"]
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        a, kp, vp = attn_block_decode(cfg, sp["attn"], h, pos,
+                                      k_pools[g], v_pools[g], ctx)
+        k_pools = k_pools.at[g].set(kp)
+        v_pools = v_pools.at[g].set(vp)
+        x = x + a
+        f = ffn_block(cfg, sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+        x = x + f
+    for j in range(leftover):
+        lp = jax.tree.map(lambda a: a[j], params["tail"])
+        h = rms_norm(x, params["tail_ln"][j], cfg.norm_eps)
+        y, s_new, c_new = mamba_block_decode(
+            cfg, lp, h, ssm_state[l], conv_state[l])
+        ssm_state = ssm_state.at[l].set(s_new)
+        conv_state = conv_state.at[l].set(c_new)
+        x = x + y
+        l += 1
+    return x, (k_pools, v_pools), ssm_state, conv_state

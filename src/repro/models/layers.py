@@ -1,0 +1,157 @@
+"""Core layers: norms, RoPE, blockwise (flash-style) attention, SwiGLU.
+
+Attention here is the *pure-JAX* implementation with flash-style blockwise
+online softmax — it is both (a) what the dry-run lowers (so compiled memory
+is O(T·block) not O(T²), like the Pallas kernel would be on real TPUs) and
+(b) the oracle the Pallas kernels are verified against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import BATCH, psum_point, shd
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions [..., T] -> (cos, sin) [..., T, dim/2], fp32."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, H, dh]; cos/sin broadcastable [..., T, 1, dh/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    cos, sin = rope_angles(positions, x.shape[-1], theta)
+    return apply_rope(x, cos[..., :, None, :], sin[..., :, None, :])
+
+
+# ------------------------------------------------- blockwise attention
+
+
+def _block_attn_scan(q, k, v, q_offset, causal: bool, kv_len, block: int,
+                     scale: float):
+    """Online-softmax attention: scan over KV blocks.
+
+    q: [B, Tq, H, dh]   k/v: [B, Tk, Hkv, dh]  (Tk padded to block multiple)
+    kv_len: [B] valid KV length (None -> all valid)
+    Returns [B, Tq, H, dh].
+    """
+    B, Tq, H, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    dh_v = v.shape[-1]
+    assert Tk % block == 0, (Tk, block)
+    groups = H // Hkv
+    nblk = Tk // block
+    # [B, Hkv, groups, Tq, dh]: grouped GQA, no repeated K/V materialized.
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    qf = qf.reshape(B, Hkv, groups, Tq, dh)
+
+    def body(carry, blk):
+        m, l, o = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, blk * block, block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, blk * block, block, axis=1)
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        # scores [B, Hkv, groups, Tq, block]
+        s = jnp.einsum("bngqd,bknd->bngqk", qf, kb)
+        kpos = blk * block + jnp.arange(block)
+        mask = jnp.ones((B, 1, 1, Tq, block), dtype=bool)
+        if causal:
+            qpos = q_offset + jnp.arange(Tq)
+            mask &= (kpos[None, None, None, None, :]
+                     <= qpos[None, None, None, :, None])
+        if kv_len is not None:
+            mask &= kpos[None, None, None, None, :] < kv_len[
+                :, None, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bngqk,bknd->bngqd", p, vb)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Hkv, groups, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, groups, Tq), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, groups, Tq, dh_v), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nblk))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    o = o.reshape(B, H, Tq, dh_v).transpose(0, 2, 1, 3)
+    return o.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset=0,
+              kv_len=None, block: int = 512, scale: Optional[float] = None):
+    """Flash-style blockwise multi-head attention (GQA via head groups).
+
+    Pads KV to a block multiple; masking handles the tail.
+    """
+    dh = q.shape[-1]
+    scale = scale if scale is not None else dh ** -0.5
+    Tk = k.shape[1]
+    block = min(block, max(Tk, 1))
+    pad = (-Tk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.full((q.shape[0],), Tk, jnp.int32)
+    return _block_attn_scan(q, k, v, q_offset, causal, kv_len, block, scale)
+
+
+# ----------------------------------------------------------------- MLPs
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("btd,df->btf", x, w_gate)
+    u = jnp.einsum("btd,df->btf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shd(h, BATCH, None, "model")
+    return psum_point(jnp.einsum("btf,fd->btd", h, w_down))
+
+
+def gqa_qkv(x, wq, wk, wv, bq=None, bk=None, bv=None):
+    """x [B,T,d] -> q [B,T,H,dh], k/v [B,T,Hkv,dh]."""
+    q = jnp.einsum("btd,dhk->bthk", x, wq)
+    k = jnp.einsum("btd,dhk->bthk", x, wk)
+    v = jnp.einsum("btd,dhk->bthk", x, wv)
+    if bq is not None:
+        q = q + bq
+        k = k + bk
+        v = v + bv
+    return q, k, v

@@ -1,0 +1,304 @@
+"""Unified LM facade: init / train-loss / prefill / decode for all 10 archs.
+
+``LM(cfg)`` dispatches on ``cfg.family``:
+
+  dense, vlm      -> transformer stack (vlm prepends stub patch embeddings)
+  moe             -> transformer stack with MoE FFN (+ dense-prefix layers)
+  (moe w/ mla)    -> MLA attention, latent paged cache (absorbed decode)
+  ssm             -> mamba2 stack (recurrent state, no KV pool)
+  hybrid          -> zamba2: mamba backbone + shared paged-attention block
+  encdec          -> seamless: encoder memory + decoder self/cross attention
+
+The decode path consumes Mosaic page tables via
+:class:`repro.models.transformer.PageCtx`; pool arrays live with the
+caller (serving engine or dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ed
+from repro.models import hybrid as hy
+from repro.models import mamba2 as m2
+from repro.models.common import cast, embed_init, shd, split_keys
+from repro.models.layers import rms_norm
+from repro.models.transformer import (
+    DP,
+    PageCtx,
+    decoder_stack_decode,
+    decoder_stack_prefill,
+    decoder_stack_train,
+    init_decoder_params,
+)
+
+AUX_LOSS_COEF = 0.01
+
+
+def _dense_view(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, moe=None)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = split_keys(key, 6)
+        p: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = embed_init(ks[1], (cfg.d_model, cfg.vocab_size))
+        if cfg.family == "encdec":
+            p.update(ed.init_encdec_params(ks[2], cfg))
+            p["frontend_proj"] = embed_init(
+                ks[3], (cfg.d_model, cfg.d_model))
+        elif cfg.family == "ssm":
+            p["decoder"] = m2.init_ssm_stack_params(ks[2], cfg, cfg.n_layers)
+        elif cfg.family == "hybrid":
+            p["decoder"] = hy.init_hybrid_params(ks[2], cfg)
+        else:
+            fd = cfg.moe.first_dense if cfg.moe else 0
+            if fd:
+                p["decoder_prefix"] = init_decoder_params(
+                    ks[3], _dense_view(cfg), fd)
+            p["decoder"] = init_decoder_params(ks[2], cfg, cfg.n_layers - fd)
+            if cfg.family == "vlm":
+                p["frontend_proj"] = embed_init(
+                    ks[4], (cfg.d_model, cfg.d_model))
+        return p
+
+    # ------------------------------------------------------------- embed
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        return shd(x.astype(jnp.dtype(self.cfg.dtype)), DP, None, None)
+
+    def _logits(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["unembed"])
+        logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+        return shd(logits, DP, None, "model")
+
+    # ------------------------------------------------------------- train
+
+    def _backbone_train(self, params, x, positions, remat: bool):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        if cfg.family == "encdec":
+            raise RuntimeError("use loss() for encdec")
+        if cfg.family == "ssm":
+            x = m2.ssm_stack_train(cfg, params["decoder"], x, remat=remat)
+        elif cfg.family == "hybrid":
+            x, _ = hy.hybrid_stack_train(cfg, params["decoder"], x, positions)
+        else:
+            if "decoder_prefix" in params:
+                x, a0 = decoder_stack_train(
+                    _dense_view(cfg), params["decoder_prefix"], x, positions,
+                    remat=remat)
+                aux = aux + a0
+            x, a1 = decoder_stack_train(cfg, params["decoder"], x, positions,
+                                        remat=remat)
+            aux = aux + a1
+        return x, aux
+
+    def loss(self, params, batch, *, remat: bool = True):
+        """batch: tokens [B,T] (+ patch_embeds / src_embeds per family)."""
+        cfg = self.cfg
+        params = cast(params, jnp.dtype(cfg.dtype))
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = self._embed(params, tokens)
+        n_prefix = 0
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = jnp.einsum("bpd,de->bpe", pe,
+                            params["frontend_proj"].astype(x.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+            n_prefix = pe.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     (B, x.shape[1]))
+        if cfg.family == "encdec":
+            src = batch["src_embeds"].astype(x.dtype)
+            src = jnp.einsum("bsd,de->bse", src,
+                             params["frontend_proj"].astype(x.dtype))
+            memory = ed.encoder_apply(cfg, params, src, remat=remat)
+            x = ed.decoder_stack_train(cfg, params, x, positions, memory,
+                                       remat=remat)
+            aux = jnp.float32(0.0)
+        else:
+            x, aux = self._backbone_train(params, x, positions, remat)
+        x = x[:, n_prefix:]
+        logits = self._logits(params, x).astype(jnp.float32)
+        tgt = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt >= 0).astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        total = loss + AUX_LOSS_COEF * aux
+        return total, {"nll": loss, "aux": aux,
+                       "tokens": mask.sum()}
+
+    # ------------------------------------------------------------- pools
+
+    def kv_layers(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0
+        if cfg.family == "hybrid":
+            return hy.n_invocations(cfg)
+        if cfg.family == "encdec":
+            return cfg.encdec.dec_layers
+        return cfg.n_layers
+
+    def pool_shapes(self, num_pages: int, page_tokens: int,
+                    dtype=jnp.bfloat16):
+        """(k_pool, v_pool) ShapeDtypeStructs (None for ssm)."""
+        cfg = self.cfg
+        L = self.kv_layers()
+        if L == 0:
+            return None
+        if cfg.mla is not None:
+            m = cfg.mla
+            kd = m.kv_lora_rank + m.qk_rope_head_dim
+            k = (L, num_pages, page_tokens, 1, kd)
+            v = (L, num_pages, page_tokens, 1, m.kv_lora_rank)
+        else:
+            dh = cfg.resolved_head_dim
+            k = (L, num_pages, page_tokens, cfg.n_kv_heads, dh)
+            v = k
+        return (jax.ShapeDtypeStruct(k, dtype),
+                jax.ShapeDtypeStruct(v, dtype))
+
+    def init_state_shapes(self, batch: int, src_len: int = 0,
+                          dtype=jnp.bfloat16) -> Dict[str, Any]:
+        """Non-pool decode state (SSM states, cross-KV) as ShapeDtypeStructs."""
+        cfg = self.cfg
+        out: Dict[str, Any] = {}
+        if cfg.family in ("ssm", "hybrid"):
+            L = (cfg.n_layers if cfg.family in ("ssm", "hybrid") else 0)
+            s_shape, c_shape = m2.state_shapes(cfg, L, batch)
+            out["ssm"] = jax.ShapeDtypeStruct(s_shape, jnp.float32)
+            out["conv"] = jax.ShapeDtypeStruct(c_shape, dtype)
+        if cfg.family == "encdec":
+            e = cfg.encdec
+            dh = cfg.resolved_head_dim
+            shape = (e.dec_layers, batch, src_len, cfg.n_kv_heads, dh)
+            out["cross_k"] = jax.ShapeDtypeStruct(shape, dtype)
+            out["cross_v"] = jax.ShapeDtypeStruct(shape, dtype)
+        return out
+
+    # ------------------------------------------------------------- prefill
+
+    def prefill(self, params, batch, pools, ctx: PageCtx,
+                last_pos=None):
+        """Full-sequence forward; writes KV/latents into the paged pools.
+
+        ``last_pos`` [B]: index of the last *valid* token per sequence
+        (prompts are right-padded to a page multiple); defaults to T-1.
+        Returns (logits at last_pos [B,V], pools', state).
+        """
+        cfg = self.cfg
+        params = cast(params, jnp.dtype(cfg.dtype))
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = self._embed(params, tokens)
+        state: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = jnp.einsum("bpd,de->bpe", pe,
+                            params["frontend_proj"].astype(x.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     (B, x.shape[1]))
+        if cfg.family == "encdec":
+            src = batch["src_embeds"].astype(x.dtype)
+            src = jnp.einsum("bsd,de->bse", src,
+                             params["frontend_proj"].astype(x.dtype))
+            memory = ed.encoder_apply(cfg, params, src)
+            x, pools, (ck, cv) = ed.decoder_stack_prefill(
+                cfg, params, x, positions, memory, pools, ctx)
+            state["cross_k"], state["cross_v"] = ck, cv
+        elif cfg.family == "ssm":
+            x, hs, convs = m2.ssm_stack_prefill(cfg, params["decoder"], x)
+            state["ssm"], state["conv"] = hs, convs
+        elif cfg.family == "hybrid":
+            x, pools, hs, convs = hy.hybrid_stack_prefill(
+                cfg, params["decoder"], x, positions, pools, ctx)
+            state["ssm"], state["conv"] = hs, convs
+        else:
+            fd = cfg.moe.first_dense if cfg.moe else 0
+            if fd:
+                kp, vp = pools
+                x, (kp0, vp0) = decoder_stack_prefill(
+                    _dense_view(cfg), params["decoder_prefix"], x, positions,
+                    (kp[:fd], vp[:fd]), ctx)
+                x, (kp1, vp1) = decoder_stack_prefill(
+                    cfg, params["decoder"], x, positions,
+                    (kp[fd:], vp[fd:]), ctx)
+                pools = (jnp.concatenate([kp0, kp1], axis=0),
+                         jnp.concatenate([vp0, vp1], axis=0))
+            else:
+                x, pools = decoder_stack_prefill(cfg, params["decoder"], x,
+                                                 positions, pools, ctx)
+        if last_pos is None:
+            x_last = x[:, -1:, :]
+        else:
+            n_prefix = x.shape[1] - tokens.shape[1]
+            idx = (n_prefix + last_pos)[:, None, None]
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+        logits = self._logits(params, x_last)[:, 0]
+        return logits, pools, state
+
+    # ------------------------------------------------------------- decode
+
+    def decode_step(self, params, tokens, pos, pools, ctx: PageCtx,
+                    state: Optional[Dict[str, Any]] = None):
+        """tokens [B] int32, pos [B] current positions (0-based).
+
+        Returns (logits [B,V], pools', state').
+        """
+        cfg = self.cfg
+        params = cast(params, jnp.dtype(cfg.dtype))
+        state = dict(state or {})
+        x = self._embed(params, tokens[:, None])
+        if cfg.family == "encdec":
+            x, pools = ed.decoder_stack_decode(
+                cfg, params, x, pos, pools, ctx,
+                (state["cross_k"], state["cross_v"]))
+        elif cfg.family == "ssm":
+            x, hs, convs = m2.ssm_stack_decode(
+                cfg, params["decoder"], x, state["ssm"], state["conv"])
+            state["ssm"], state["conv"] = hs, convs
+        elif cfg.family == "hybrid":
+            x, pools, hs, convs = hy.hybrid_stack_decode(
+                cfg, params["decoder"], x, pos, pools, ctx,
+                state["ssm"], state["conv"])
+            state["ssm"], state["conv"] = hs, convs
+        else:
+            fd = cfg.moe.first_dense if cfg.moe else 0
+            if fd:
+                kp, vp = pools
+                x, (kp0, vp0) = decoder_stack_decode(
+                    _dense_view(cfg), params["decoder_prefix"], x, pos,
+                    (kp[:fd], vp[:fd]), ctx)
+                x, (kp1, vp1) = decoder_stack_decode(
+                    cfg, params["decoder"], x, pos, (kp[fd:], vp[fd:]), ctx)
+                pools = (jnp.concatenate([kp0, kp1], axis=0),
+                         jnp.concatenate([vp0, vp1], axis=0))
+            else:
+                x, pools = decoder_stack_decode(cfg, params["decoder"], x,
+                                                pos, pools, ctx)
+        logits = self._logits(params, x)[:, 0]
+        return logits, pools, state

@@ -1,0 +1,107 @@
+"""Multi-head Latent Attention (DeepSeek-V2), train + absorbed decode.
+
+Train/prefill: latent ``c = RMSNorm(x·W_DKV)`` is up-projected to per-head
+K_nope/V and attention runs expanded (flash).  The *paged cache stores only
+the compressed latent + shared RoPE key* (kv_lora + rope_dim per token —
+the MLA memory win survives paging).
+
+Decode uses the absorbed form: q_nope is pushed through W_UK once
+(``q_lat = q_nope·W_UK``), scores are taken directly against the cached
+latent, and the attention output (a latent-space vector) is up-projected
+through W_UV *after* the flash combine — so the paged kernel never
+materializes per-head K/V.  The pool is addressed with n_kv=1,
+k-payload = [latent ‖ k_rope] (dim kv_lora+rope), v-payload = latent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shd, split_keys
+from repro.models.layers import apply_rope, attention, rms_norm, rope_angles
+
+from repro.models.common import BATCH as DP  # batch sentinel
+
+
+def init_mla_params(key, cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qdim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = split_keys(key, 6)
+    return {
+        "wq": dense_init(ks[0], (L, d, H, qdim), in_axis=1),
+        "w_dkv": dense_init(ks[1], (L, d, m.kv_lora_rank), in_axis=1),
+        "w_kr": dense_init(ks[2], (L, d, m.qk_rope_head_dim), in_axis=1),
+        "kv_norm": jnp.ones((L, m.kv_lora_rank)),
+        "w_uk": dense_init(ks[3], (L, m.kv_lora_rank, H, m.qk_nope_head_dim),
+                           in_axis=1),
+        "w_uv": dense_init(ks[4], (L, m.kv_lora_rank, H, m.v_head_dim),
+                           in_axis=1),
+        "wo": dense_init(ks[5], (L, H, m.v_head_dim, d), in_axis=1),
+    }
+
+
+def _q_and_latent(cfg: ModelConfig, p, x, positions):
+    """Shared projections: roped q halves + normalized latent + roped k_rope."""
+    m = cfg.mla
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[..., :, None, :], sin[..., :, None, :])
+    lat = jnp.einsum("btd,dk->btk", x, p["w_dkv"])
+    lat = rms_norm(lat, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("btd,dk->btk", x, p["w_kr"])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[..., :, None, :],
+                        sin[..., :, None, :])[:, :, 0, :]
+    return q_nope, q_rope, lat, k_rope
+
+
+def mla_block_train(cfg: ModelConfig, p, x, positions,
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Expanded attention; returns (out, paged-cache payloads)."""
+    m = cfg.mla
+    q_nope, q_rope, lat, k_rope = _q_and_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("btk,khn->bthn", lat, p["w_uk"])
+    v = jnp.einsum("btk,khn->bthn", lat, p["w_uv"])
+    H = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], H, m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = shd(q, DP, None, "model", None)
+    o = attention(q, k, v, causal=True,
+                  scale=(m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    o = shd(o, DP, None, "model", None)
+    out = jnp.einsum("bthv,hvd->btd", o, p["wo"])
+    payload = {
+        "k": jnp.concatenate([lat, k_rope], axis=-1)[:, :, None, :],
+        "v": lat[:, :, None, :],
+    }
+    return out, payload
+
+
+def mla_block_decode(cfg: ModelConfig, p, x, pos, k_pool, v_pool, ctx):
+    """Absorbed-form decode over the latent paged pool.
+
+    x [B,1,d]; pools: k [NP,ptok,1,lora+rope], v [NP,ptok,1,lora].
+    """
+    from repro.models.transformer import paged_attn_op
+    m = cfg.mla
+    q_nope, q_rope, lat, k_rope = _q_and_latent(cfg, p, x, pos[:, None])
+    # Absorb W_UK into the query: scores vs latent directly.
+    q_lat = jnp.einsum("bhn,khn->bhk", q_nope[:, 0], p["w_uk"])
+    q_eff = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)  # [B,H,lora+rope]
+    k_new = jnp.concatenate([lat, k_rope], axis=-1)[:, 0, None, :]
+    v_new = lat[:, 0, None, :]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o_lat, k_pool, v_pool = paged_attn_op(
+        q_eff, k_new, v_new, k_pool, v_pool, ctx, scale=scale)
+    o = jnp.einsum("bhk,khv->bhv", o_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])[:, None, :]
+    return out, k_pool, v_pool

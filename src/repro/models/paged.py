@@ -1,0 +1,216 @@
+"""Paged KV-cache: the model-side consumer of Mosaic page tables.
+
+Layout (per layer, per page-shard):
+  k_pool / v_pool : [num_pages_local, page_tokens, n_kv, head_dim]
+  latent_pool     : [num_pages_local, page_tokens, kv_lora + rope_dim]  (MLA)
+
+The serving engine assigns each sequence to a data shard and spreads its
+pages across that shard's sub-pools (one per model-axis shard) — frames
+never straddle sub-pools, so CoCoA/coalescing operate shard-locally
+(DESIGN.md §3, SP).  Device-side state is addressed through *packed local
+tables* prepared by :class:`repro.serving.kv_cache.ShardedKVCache`:
+
+  tables  : int32 [B, S, mpps]  local page id (-1 = hole)
+  ntok    : int32 [B, S, mpps]  valid tokens in that page
+  wpage   : int32 [B, S]        local page holding the current write slot
+  wslot   : int32 [B]           slot within the write page
+
+Attention across sub-pools uses partial flash-softmax stats combined with
+``psum``/``pmax`` over the page-shard mesh axes; each shard computes an
+*unnormalized* (o, m, l) over its local pages only.  This file is the pure
+JNP oracle; ``repro.kernels.paged_attention`` is the Pallas TPU kernel with
+the dual-granularity (coalesced-frame fast path vs base-page gather) that
+realizes the paper's TLB-reach benefit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def write_kv(k_pool, v_pool, k_new, v_new, wpage, wslot):
+    """Write one new token's K/V into the local sub-pool (decode step).
+
+    k_new/v_new: [B, n_kv, dh]; wpage: [B] local page id (-1: not owned
+    here); wslot: [B].  Returns updated pools.
+    """
+    # Rows not owned by this shard (wpage == -1) scatter out of bounds and
+    # are dropped — never clamp to page 0 (a live page): duplicate scatter
+    # indices with different payloads are order-undefined.
+    target = jnp.where(wpage >= 0, wpage, k_pool.shape[0])
+
+    def upd(pool, new):
+        return pool.at[target, wslot].set(new.astype(pool.dtype),
+                                          mode="drop")
+
+    return upd(k_pool, k_new), upd(v_pool, v_new)
+
+
+def write_latent(latent_pool, lat_new, wpage, wslot):
+    """MLA variant: lat_new [B, kv_lora+rope].  Holes drop (see write_kv)."""
+    target = jnp.where(wpage >= 0, wpage, latent_pool.shape[0])
+    return latent_pool.at[target, wslot].set(
+        lat_new.astype(latent_pool.dtype), mode="drop")
+
+
+def write_prefill_kv(k_pool, v_pool, k_seq, v_seq, tables, *,
+                     shard_idx=0, n_shards: int = 1, frame_pages: int = 16):
+    """Scatter a prefilled sequence's KV into the local sub-pool en masse.
+
+    k_seq/v_seq: [B, T, n_kv, dh] (T multiple of page_tokens; the full
+    sequence is replicated across page shards);
+    tables: [B, mpps] local page ids owned by THIS shard, in local vpn
+    order (-1 holes).  Pages stripe over shards by *frame* round-robin
+    (global frame f lives on shard f % n_shards — the ShardedKVCache
+    contract), so local page j of shard s backs global vpn
+
+        ((s + (j // frame_pages) * n_shards) * frame_pages + j % frame_pages)
+
+    and we gather that page's tokens from the replicated sequence.  With
+    n_shards == 1 this degenerates to vpn == j (the single-shard and
+    test path).
+    """
+    B, T, n_kv, dh = k_seq.shape
+    dh_v = v_seq.shape[-1]                                # may differ (MLA)
+    ptok = k_pool.shape[1]
+    assert T % ptok == 0
+    m = tables.shape[1]
+    j = jnp.arange(m)
+    gframe = shard_idx + (j // frame_pages) * n_shards
+    vpn = gframe * frame_pages + (j % frame_pages)        # [m]
+    tok0 = vpn * ptok
+    tb = tables.reshape(-1)                               # [B*m]
+    own = (tb >= 0) & jnp.tile(tok0 < T, B)
+    idx = jnp.clip(tok0[:, None] + jnp.arange(ptok)[None, :], 0, T - 1)
+    # Holes scatter out of bounds and are dropped (never clamp to a live
+    # page: duplicate scatter indices with different payloads are
+    # order-undefined).
+    NP = k_pool.shape[0]
+    target = jnp.where(own, tb, NP)
+
+    def upd(pool, seq):
+        new = seq[:, idx].reshape(B * m, ptok, n_kv, seq.shape[-1])
+        return pool.at[target].set(new.astype(pool.dtype), mode="drop")
+
+    return upd(k_pool, k_seq), upd(v_pool, v_seq)
+
+
+def paged_attention_local(
+    q, k_pool, v_pool, tables, ntok, *, scale: Optional[float] = None,
+    page_block: int = 8,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial paged attention over this shard's pages (pure-JNP oracle).
+
+    q:      [B, H, dh] single decode query per sequence
+    tables: [B, mpps] local page ids; ntok: [B, mpps] valid tokens/page
+    Returns unnormalized (o [B,H,dh], m [B,H], l [B,H]) fp32 partials to be
+    flash-combined across page shards.
+    """
+    B, H, dh = q.shape
+    npages_pool, ptok, n_kv, _ = k_pool.shape
+    dh_v = v_pool.shape[-1]                               # may differ (MLA)
+    mpps = tables.shape[1]
+    groups = H // n_kv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    pb = min(page_block, mpps)
+    pad = (-mpps) % pb
+    if pad:
+        tables = jnp.pad(tables, ((0, 0), (0, pad)), constant_values=-1)
+        ntok = jnp.pad(ntok, ((0, 0), (0, pad)))
+        mpps += pad
+    nblk = mpps // pb
+
+    def body(carry, blk):
+        m, l, o = carry
+        tb = jax.lax.dynamic_slice_in_dim(tables, blk * pb, pb, axis=1)
+        nt = jax.lax.dynamic_slice_in_dim(ntok, blk * pb, pb, axis=1)
+        safe = jnp.maximum(tb, 0)
+        k = k_pool[safe]                                  # [B, pb, ptok, n_kv, dh]
+        v = v_pool[safe]
+        k = k.reshape(B, pb * ptok, n_kv, dh).astype(jnp.float32)
+        v = v.reshape(B, pb * ptok, n_kv, dh_v).astype(jnp.float32)
+        # Grouped GQA scores without materializing repeated K/V.
+        s = jnp.einsum("bngd,bknd->bngk", qg, k)          # [B,n_kv,g,K]
+        slot = jnp.arange(ptok)[None, None, :]
+        valid = (tb >= 0)[:, :, None] & (slot < nt[:, :, None])
+        valid = valid.reshape(B, 1, 1, pb * ptok)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bngk,bknd->bngd", p, v)
+        return (m_new, l_new, o_new), None
+
+    qg = qf.reshape(B, n_kv, groups, dh)
+    m0 = jnp.full((B, n_kv, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, n_kv, groups), jnp.float32)
+    o0 = jnp.zeros((B, n_kv, groups, dh_v), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nblk))
+    return (o.reshape(B, H, dh_v), m.reshape(B, H), l.reshape(B, H))
+
+
+def paged_attention_latent_local(
+    q_lat, q_rope, latent_pool, tables, ntok, *, scale: float,
+    kv_lora: int, page_block: int = 8,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """MLA absorbed-form paged attention over the compressed latent cache.
+
+    q_lat:  [B, H, kv_lora]   (q_nope absorbed through W_UK)
+    q_rope: [B, H, rope_dim]
+    latent_pool: [np_local, ptok, kv_lora + rope_dim]
+    Returns unnormalized (o [B,H,kv_lora], m, l): the 'values' are the
+    latents themselves; the caller up-projects once via W_UV after combine.
+    """
+    B, H, _ = q_lat.shape
+    _, ptok, lat_dim = latent_pool.shape
+    mpps = tables.shape[1]
+    pb = min(page_block, mpps)
+    nblk = mpps // pb
+    qf = jnp.concatenate([q_lat, q_rope], axis=-1).astype(jnp.float32) * scale
+
+    def body(carry, blk):
+        m, l, o = carry
+        tb = jax.lax.dynamic_slice_in_dim(tables, blk * pb, pb, axis=1)
+        nt = jax.lax.dynamic_slice_in_dim(ntok, blk * pb, pb, axis=1)
+        safe = jnp.maximum(tb, 0)
+        lat = latent_pool[safe].reshape(B, pb * ptok, lat_dim).astype(jnp.float32)
+        s = jnp.einsum("bhd,bkd->bhk", qf, lat)
+        slot = jnp.arange(ptok)[None, None, :]
+        valid = (tb >= 0)[:, :, None] & (slot < nt[:, :, None])
+        valid = valid.reshape(B, 1, pb * ptok)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhk,bkd->bhd", p, lat[..., :kv_lora]
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    o0 = jnp.zeros((B, H, kv_lora), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nblk))
+    return o, m, l
+
+
+def combine_partials(o, m, l, axes) -> jax.Array:
+    """Flash-combine (o, m, l) partials across mesh axes (inside shard_map)."""
+    if axes:
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        o_g = jax.lax.psum(o * corr[..., None], axes)
+    else:
+        l_g, o_g = l, o
+    return o_g / jnp.maximum(l_g[..., None], 1e-30)

@@ -1,0 +1,264 @@
+"""Multi-tenant continuous-batching serving engine on the Mosaic pool.
+
+Lifecycle per request: admit → (en-masse) prefill → join the decode batch →
+complete → deallocate (whole frames return to CoCoA thanks to the soft
+guarantee; CAC compacts any splintered leftovers and the engine executes
+the copy plan with the ``page_compact`` kernel between steps).
+
+This is the paper's multi-application GPU setting transplanted: tenants
+share one physical pool; the manager flag flips between ``mosaic`` and the
+``gpu-mmu`` baseline so benchmarks can measure both (Figs. 5/6 analogue:
+same workload, different manager).
+
+The engine is deliberately host-driven: page tables are packed on host per
+step (Mosaic's runtime half), while the device step (prefill/decode +
+pool writes) is a single jitted call (the hardware half).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, PoolGeometry
+from repro.kernels import ops as kops
+from repro.models.lm import LM
+from repro.serving.kv_cache import ShardedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tenant: int
+    prompt: np.ndarray           # int32 [T]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0
+    compaction_copies: int = 0
+    wall_s: float = 0.0
+    coalesced_sum: float = 0.0   # running sum of per-step coalesced fraction
+    occupancy_sum: float = 0.0
+
+    @property
+    def coalesced_mean(self) -> float:
+        return self.coalesced_sum / max(self.decode_steps, 1)
+
+    @property
+    def occupancy_mean(self) -> float:
+        return self.occupancy_sum / max(self.decode_steps, 1)
+
+    def tok_per_s(self) -> float:
+        return (self.prefill_tokens + self.decode_tokens) / max(
+            self.wall_s, 1e-9)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, geometry: PoolGeometry,
+                 max_batch: int, max_seq: int, manager_kind: str = "mosaic",
+                 n_shards: int = 1, params=None, seed: int = 0,
+                 use_pallas: bool = False):
+        self.cfg = cfg
+        self.lm = LM(cfg)
+        self.geo = geometry
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.use_pallas = use_pallas
+        pages_per_seq = (max_seq + geometry.page_tokens - 1) \
+            // geometry.page_tokens
+        self.mpps = int(np.ceil(pages_per_seq / n_shards
+                                / geometry.frame_pages)
+                        ) * geometry.frame_pages
+        per_shard = int(geometry.pages_for(max_seq, max_batch) / n_shards)
+        per_shard = ((per_shard + geometry.frame_pages - 1)
+                     // geometry.frame_pages) * geometry.frame_pages
+        self.cache = ShardedKVCache(geometry, per_shard, n_shards,
+                                    manager_kind)
+        self.params = params if params is not None else self.lm.init(
+            jax.random.PRNGKey(seed))
+        shapes = self.lm.pool_shapes(per_shard * n_shards,
+                                     geometry.page_tokens)
+        self.pools = (tuple(jnp.zeros(s.shape, s.dtype) for s in shapes)
+                      if shapes else None)
+        self.states: Dict[int, dict] = {}
+        self.queue: Deque[Request] = deque()
+        self.active: List[Request] = []
+        self.stats = EngineStats()
+        self._decode_jit = jax.jit(
+            lambda p, t, pos, pools, ctx, st: self.lm.decode_step(
+                p, t, pos, pools, ctx, st))
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.max_batch:
+            req = self.queue.popleft()
+            self._prefill(req)
+            self.active.append(req)
+
+    def _prefill(self, req: Request):
+        ptok = self.geo.page_tokens
+        T = len(req.prompt)
+        Tpad = ((T + ptok - 1) // ptok) * ptok
+        # VLM: patch-embedding prefix occupies KV positions before the text
+        # (frontend_tokens is page-aligned in all full configs).
+        n_prefix = (self.cfg.frontend_tokens
+                    if self.cfg.family == "vlm" else 0)
+        self.cache.allocate(req.rid, n_prefix + T)
+        # Allocation under memory pressure may have compacted: the tables
+        # already point at the new locations, so the data copies must land
+        # BEFORE the device reads them (and before the pages freed by
+        # compaction are overwritten by this prefill).
+        self._run_compaction()
+        ctx = self._ctx_global(self.cache.pack_ctx([req.rid], self.mpps))
+        tokens = np.full((1, Tpad), 0, np.int32)
+        tokens[0, :T] = req.prompt
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.frontend_tokens, self.cfg.d_model))
+        if self.cfg.family == "encdec":
+            batch["src_embeds"] = jnp.zeros(
+                (1, self.cfg.encdec.source_len, self.cfg.d_model))
+        logits, pools_new, state = self.lm.prefill(
+            self.params, batch, self._pools_for([req.rid]), ctx,
+            last_pos=jnp.asarray([T - 1], jnp.int32))
+        self._merge_pools([req.rid], pools_new)
+        self.states[req.rid] = state
+        nxt = int(jnp.argmax(logits[0]))
+        req.out.append(nxt)
+        # tokens beyond T within the padded page are unused; tracked length
+        # stays T (+1 for the decode append below).
+        self.stats.prefill_tokens += T
+
+    # ------------------------------------------------------------- pools
+
+    # For simplicity pools are global arrays addressed by global page id =
+    # shard * pages_per_shard + local id; pack_ctx returns local ids, so we
+    # offset per shard here.
+    def _pools_for(self, seqs):
+        return self.pools
+
+    def _merge_pools(self, seqs, pools_new):
+        self.pools = pools_new
+
+    def _ctx_global(self, ctx):
+        """Convert per-shard local page ids to global pool ids."""
+        S = self.cache.S
+        pps = self.cache.pages_per_shard
+        off = (jnp.arange(S) * pps)[None, :, None]
+        tables = jnp.where(ctx.tables >= 0, ctx.tables + off, -1)
+        woff = (jnp.arange(S) * pps)[None, :]
+        wpage = jnp.where(ctx.wpage >= 0, ctx.wpage + woff, -1)
+        return dataclasses.replace(ctx, tables=tables, wpage=wpage)
+
+    # ------------------------------------------------------------- stepping
+
+    def step(self):
+        """One engine iteration: admit, one batched decode step, retire."""
+        t0 = time.time()
+        self._admit()
+        if not self.active:
+            return False
+        seqs = [r.rid for r in self.active]
+        # Append this step's token slot, then pack tables.
+        for r in self.active:
+            self.cache.append(r.rid, 1)
+        # Appends under pressure may compact; execute the copy plan before
+        # the decode step consumes the updated tables (ordering matters:
+        # tables are rewritten at plan time, payloads move here).
+        self._run_compaction()
+        ctx = self._ctx_global(self.cache.pack_ctx(seqs, self.mpps))
+        toks = jnp.asarray([r.out[-1] for r in self.active], jnp.int32)
+        pos = jnp.asarray([self.cache.seq_tokens[r.rid] - 1
+                           for r in self.active], jnp.int32)
+        state = self._stack_states(seqs)
+        logits, self.pools, state = self._decode_jit(
+            self.params, toks, pos, self.pools, ctx, state)
+        self._unstack_states(seqs, state)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done_now = []
+        for i, r in enumerate(self.active):
+            r.out.append(int(nxt[i]))
+            self.stats.decode_tokens += 1
+            if len(r.out) >= r.max_new \
+                    or self.cache.seq_tokens[r.rid] >= self.max_seq - 1:
+                r.done = True
+                done_now.append(r)
+        for r in done_now:
+            self.active.remove(r)
+            self.cache.free(r.rid)
+            self.states.pop(r.rid, None)
+        # Execute any CAC compaction plans on-device.
+        self._run_compaction()
+        st = self.cache.stats()
+        self.stats.coalesced_sum += st.get("coalesced_fraction", 0.0)
+        self.stats.occupancy_sum += st.get("occupancy", 0.0)
+        self.stats.decode_steps += 1
+        self.stats.wall_s += time.time() - t0
+        return True
+
+    def _run_compaction(self):
+        ops = self.cache.drain_copy_ops()
+        if not ops or self.pools is None:
+            return
+        pps = self.cache.pages_per_shard
+        src = jnp.asarray([s * pps + op.src_ppn for s, op in ops],
+                          jnp.int32)
+        dst = jnp.asarray([s * pps + op.dst_ppn for s, op in ops],
+                          jnp.int32)
+        k, v = self.pools
+        # pools are stacked [L, NP, ...]: compact every layer's pool.
+        k = jax.vmap(lambda pool: kops.page_compact(
+            pool, src, dst, use_pallas=self.use_pallas))(k)
+        v = jax.vmap(lambda pool: kops.page_compact(
+            pool, src, dst, use_pallas=self.use_pallas))(v)
+        self.pools = (k, v)
+        self.stats.compaction_copies += len(ops)
+
+    # ------------------------------------------------------------- states
+
+    def _stack_states(self, seqs):
+        if not self.states:
+            return {}
+        keys = self.states[seqs[0]].keys()
+        return {k: jnp.concatenate(
+            [self._state_of(s)[k] for s in seqs],
+            axis=1 if k in ("ssm", "conv", "cross_k", "cross_v") else 0)
+            for k in keys}
+
+    def _state_of(self, seq):
+        return self.states[seq]
+
+    def _unstack_states(self, seqs, stacked):
+        if not stacked:
+            return
+        for k, v in stacked.items():
+            ax = 1 if k in ("ssm", "conv", "cross_k", "cross_v") else 0
+            parts = jnp.split(v, len(seqs), axis=ax)
+            for s, part in zip(seqs, parts):
+                self.states[s][k] = part
+
+    # ------------------------------------------------------------- run
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,68 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (from scratch).
+
+State is a plain pytree so the trainer can shard it with ZeRO-1 specs:
+moments live in fp32 at the params' shapes; master params are the fp32
+params themselves (models cast to bf16 at entry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainHParams
+
+
+def lr_schedule(hp: TrainHParams, step):
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - hp.warmup_steps)
+                 / jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return hp.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "mu": zeros(), "nu": zeros()}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, hp: TrainHParams):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / jnp.maximum(gn, 1e-12))
+    lr = lr_schedule(hp, step)
+    b1, b2 = hp.b1, hp.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / c1
+        vhat = nu / c2
+        step_ = mhat / (jnp.sqrt(vhat) + hp.eps)
+        newp = p.astype(jnp.float32) * (1 - lr * hp.weight_decay) - lr * step_
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}, {
+        "grad_norm": gn, "lr": lr}

@@ -1,0 +1,63 @@
+"""Shared test fixtures/helpers.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches see
+the single real CPU device; only launch/dryrun.py requests 512 placeholder
+devices (and must be run as its own process).
+"""
+
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.transformer import PageCtx
+
+
+def toy_page_ctx(batch: int, seq_len: int, page_tokens: int, mpps: int,
+                 *, extra_tokens: int = 0):
+    """Identity-ish page tables for a single-shard pool (tests only).
+
+    Sequence b uses pages [b*mpps, b*mpps + pages_needed).  Returns
+    (ctx, num_pages_needed).  ``extra_tokens`` reserves the write page for
+    decode steps past seq_len.
+    """
+    total = seq_len + extra_tokens
+    pages = (total + page_tokens - 1) // page_tokens
+    assert pages <= mpps
+    tables = np.full((batch, 1, mpps), -1, np.int32)
+    ntok = np.zeros((batch, 1, mpps), np.int32)
+    for b in range(batch):
+        for i in range(pages):
+            tables[b, 0, i] = b * mpps + i
+            ntok[b, 0, i] = min(page_tokens, total - i * page_tokens)
+    wpage = np.zeros((batch, 1), np.int32)
+    wslot = np.zeros((batch,), np.int32)
+    if extra_tokens or seq_len:
+        pos = total - 1
+        for b in range(batch):
+            wpage[b, 0] = b * mpps + pos // page_tokens
+        wslot[:] = pos % page_tokens
+    ctx = PageCtx(tables=jnp.asarray(tables), ntok=jnp.asarray(ntok),
+                  wpage=jnp.asarray(wpage), wslot=jnp.asarray(wslot))
+    return ctx, batch * mpps
+
+
+def ctx_at_position(batch: int, mpps: int, page_tokens: int, pos: int):
+    """PageCtx for decoding the token at absolute position ``pos``."""
+    total = pos + 1
+    pages = (total + page_tokens - 1) // page_tokens
+    tables = np.full((batch, 1, mpps), -1, np.int32)
+    ntok = np.zeros((batch, 1, mpps), np.int32)
+    for b in range(batch):
+        for i in range(pages):
+            tables[b, 0, i] = b * mpps + i
+            ntok[b, 0, i] = min(page_tokens, total - i * page_tokens)
+    wpage = np.asarray(
+        [[b * mpps + pos // page_tokens] for b in range(batch)], np.int32)
+    wslot = np.full((batch,), pos % page_tokens, np.int32)
+    return PageCtx(tables=jnp.asarray(tables), ntok=jnp.asarray(ntok),
+                   wpage=jnp.asarray(wpage), wslot=jnp.asarray(wslot))

@@ -1,0 +1,41 @@
+"""Dry-run lowering smoke test (deliverable e, one cell per kind).
+
+The full 80-cell matrix runs via ``python -m repro.launch.dryrun --all
+--mesh both`` (captured in dryrun_all.log / dryrun_all.jsonl); here we
+keep one train and one decode cell compiling against the production
+16x16 mesh in CI.  Must run in a subprocess: the 512-device override has
+to precede any jax import.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cell(arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "pod"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    recs = [json.loads(l) for l in out.stdout.splitlines()
+            if l.startswith("{")]
+    assert len(recs) == 1
+    return recs[0]
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen2.5-3b", "train_4k"),
+                                        ("qwen2.5-3b", "decode_32k")])
+def test_cell_lowers_and_fits(arch, shape):
+    rec = run_cell(arch, shape)
+    assert rec["chips"] == 256
+    assert rec["per_device_bytes"]["peak"] < 16e9, "exceeds v5e HBM"
+    assert rec["hlo_flops_per_chip"] > 0
+    assert rec["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+    assert rec["collective_bytes_per_chip"]["total"] > 0

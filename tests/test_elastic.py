@@ -1,0 +1,105 @@
+"""Fleet-supervision tests: heartbeats, stragglers, elastic restart.
+
+The decision engine is transport-agnostic (we drive time directly), so
+these tests cover exactly the logic that must be right when a pod dies
+mid-run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch.elastic import (
+    FleetDecision,
+    FleetMonitor,
+    elastic_restart_plan,
+)
+from repro.launch.mesh import make_elastic_mesh
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def make(n=8, **kw):
+    clk = Clock()
+    mon = FleetMonitor(n, now=clk, dead_after_s=60.0, straggle_factor=2.0,
+                       straggle_patience=3, devices_per_worker=8, **kw)
+    return mon, clk
+
+
+def beat_all(mon, n, step, dt=1.0, skip=()):
+    for i in range(n):
+        if i not in skip:
+            mon.heartbeat(i, step, dt)
+
+
+def test_healthy_fleet_is_ok():
+    mon, clk = make()
+    for s in range(5):
+        clk.t += 10
+        beat_all(mon, 8, s)
+        assert mon.assess().kind == "ok"
+
+
+def test_missed_heartbeats_trigger_restart():
+    mon, clk = make()
+    beat_all(mon, 8, 0)
+    clk.t += 61
+    beat_all(mon, 8, 1, skip=(3, 5))
+    d = mon.assess()
+    assert d.kind == "restart"
+    assert set(d.dead) == {3, 5}
+    assert d.new_world_size == 6 * 8
+    assert sorted(mon.alive_workers()) == [0, 1, 2, 4, 6, 7]
+    # Dead workers stay dead on later assessments.
+    clk.t += 1
+    beat_all(mon, 8, 2, skip=(3, 5))
+    assert mon.assess().kind == "ok"
+
+
+def test_straggler_mitigated_then_evicted():
+    mon, clk = make()
+    kinds = []
+    for s in range(4):
+        clk.t += 5
+        for i in range(8):
+            mon.heartbeat(i, s, 10.0 if i == 2 else 1.0)
+        d = mon.assess()
+        kinds.append(d.kind)
+        if d.kind == "mitigate":
+            assert d.stragglers == (2,)
+        if d.kind == "restart":
+            assert 2 in d.dead
+    # two soft strikes, then eviction; afterwards the fleet is healthy.
+    assert kinds == ["mitigate", "mitigate", "restart", "ok"]
+
+
+def test_straggler_strikes_reset_on_recovery():
+    mon, clk = make()
+    clk.t += 5
+    for i in range(8):
+        mon.heartbeat(i, 0, 10.0 if i == 2 else 1.0)
+    assert mon.assess().kind == "mitigate"
+    clk.t += 5
+    beat_all(mon, 8, 1)          # worker 2 recovers
+    assert mon.assess().kind == "ok"
+    assert mon.workers[2].straggle_strikes == 0
+
+
+@pytest.mark.parametrize("n,expect", [
+    (256, ((16, 16), ("data", "model"))),
+    (192, ((12, 16), ("data", "model"))),  # 192 % 16 == 0 -> model stays 16
+    (100, ((25, 4), ("data", "model"))),
+    (7, ((7, 1), ("data", "model"))),      # prime: pure DP
+])
+def test_elastic_restart_plan(n, expect):
+    assert elastic_restart_plan(n) == expect
+
+
+def test_elastic_mesh_matches_plan():
+    mesh = make_elastic_mesh(1, model=1)
+    assert mesh.shape == {"data": 1, "model": 1}

@@ -1,0 +1,156 @@
+"""TLB/paging simulator tests: the paper's evaluation apparatus must
+reproduce the paper's qualitative claims on small workloads.
+
+Full-scale figure reproductions (235 workloads) live in benchmarks/; these
+tests assert the *trends* on scaled-down runs so CI stays fast:
+
+  Fig.1  large pages ≈ ideal-TLB performance >> base pages
+  Fig.5  weighted speedup: Mosaic > GPU-MMU; Mosaic ≈ Ideal
+  Fig.8  L1/L2 hit rates: Mosaic ≈ 1 > GPU-MMU; GPU-MMU degrades with apps
+  Fig.7  demand paging on/off changes Mosaic's relative win only mildly
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.tlb_sim import SimConfig, TranslationSim, weighted_speedup
+from repro.core.workloads import (
+    APP_NAMES,
+    build_workload,
+    heterogeneous_names,
+    homogeneous_names,
+)
+
+N_ACCESS = 3000   # scaled-down traces (full scale in benchmarks/)
+
+
+def run_sim(names, manager_kind, *, mode="mosaic", ideal=False,
+            paging=True, seed=0, n_access=N_ACCESS):
+    traces, mgr = build_workload(names, manager_kind, seed=seed,
+                                 n_access=n_access)
+    cfg = SimConfig(mode=mode, ideal=ideal, paging=paging)
+    sim = TranslationSim(cfg, traces)
+    res = sim.run()
+    return res, sim, mgr
+
+
+def ipcs(res):
+    return np.array([r.ipc for r in res])
+
+
+# ----------------------------------------------------------------- fig 1
+
+
+def test_large_pages_beat_base_pages_and_near_ideal():
+    names = homogeneous_names("bfs", 2)     # TLB-thrashing profile
+    res_base, _, _ = run_sim(names, "gpu-mmu", mode="base", paging=False)
+    res_large, _, _ = run_sim(names, "gpu-mmu", mode="large", paging=False)
+    res_ideal, _, _ = run_sim(names, "gpu-mmu", ideal=True, paging=False)
+    perf_base = ipcs(res_base).sum()
+    perf_large = ipcs(res_large).sum()
+    perf_ideal = ipcs(res_ideal).sum()
+    # Paper Fig. 1: 4KB loses ~48% vs ideal; 2MB comes within ~2%.
+    assert perf_base < 0.8 * perf_ideal
+    assert perf_large > 0.9 * perf_ideal
+    assert perf_large > 1.2 * perf_base
+
+
+# ----------------------------------------------------------------- fig 5
+
+
+@pytest.mark.parametrize("napps", [2, 4])
+def test_mosaic_beats_gpummu_homogeneous(napps):
+    names = homogeneous_names("spmv", napps)
+    alone, _, _ = run_sim(names[:1], "gpu-mmu", mode="base")
+    shared_m, sim_m, mgr_m = run_sim(names, "mosaic", mode="mosaic")
+    shared_b, sim_b, mgr_b = run_sim(names, "gpu-mmu", mode="base")
+    shared_i, _, _ = run_sim(names, "gpu-mmu", ideal=True)
+    alone_n = alone * napps
+    ws_m = weighted_speedup(shared_m, alone_n)
+    ws_b = weighted_speedup(shared_b, alone_n)
+    ws_i = weighted_speedup(shared_i, alone_n)
+    assert ws_m > ws_b, "Mosaic must outperform GPU-MMU"
+    assert ws_m > 0.75 * ws_i, "Mosaic should approach the ideal TLB"
+    # Mechanism check: the win comes from coalescing (Fig. 8's cause).
+    # The baseline "virtually always" interleaves owners in frames (paper
+    # Fig. 2); a handful of early allocations may land lucky, so assert
+    # the opportunity *rate* is negligible rather than exactly zero.
+    assert mgr_m.pool.coalesced_fraction() > 0.9
+    opp_rate = (mgr_b.stats()["coalesce_opportunities"]
+                / max(mgr_b.pool.stats["pages_allocated"], 1))
+    assert opp_rate < 0.01
+
+
+def test_mosaic_beats_gpummu_heterogeneous():
+    names = heterogeneous_names(3, seed=1)
+    alone = [run_sim([n], "gpu-mmu", mode="base")[0][0] for n in names]
+    shared_m, _, _ = run_sim(names, "mosaic", mode="mosaic")
+    shared_b, _, _ = run_sim(names, "gpu-mmu", mode="base")
+    ws_m = weighted_speedup(shared_m, alone)
+    ws_b = weighted_speedup(shared_b, alone)
+    assert ws_m > ws_b
+
+
+# ----------------------------------------------------------------- fig 8
+
+
+def test_tlb_hit_rates_mosaic_vs_baseline():
+    names = homogeneous_names("shoc-spmv", 3)
+    _, sim_m, _ = run_sim(names, "mosaic", mode="mosaic")
+    _, sim_b, _ = run_sim(names, "gpu-mmu", mode="base")
+    # Paper: Mosaic's miss rate falls below ~1% instruction-level in both
+    # TLB levels; the baseline thrashes.
+    assert sim_m.l1_hit_rate_micro() > 0.99
+    assert sim_m.l1_hit_rate_micro() > sim_b.l1_hit_rate_micro()
+    assert sim_m.l2_hit_rate() >= sim_b.l2_hit_rate() * 0.95
+
+
+def test_baseline_l2_degrades_with_more_apps():
+    """Fig. 8's second observation: GPU-MMU interference grows with app
+    count while Mosaic is immune (large-page entries cover the pool)."""
+    h2 = run_sim(homogeneous_names("kmeans", 2), "gpu-mmu", mode="base")[1]
+    h5 = run_sim(homogeneous_names("kmeans", 5), "gpu-mmu", mode="base")[1]
+    m2 = run_sim(homogeneous_names("kmeans", 2), "mosaic", mode="mosaic")[1]
+    m5 = run_sim(homogeneous_names("kmeans", 5), "mosaic", mode="mosaic")[1]
+    assert h5.l2_hit_rate() < h2.l2_hit_rate()          # baseline degrades
+    drop_m = m2.l1_hit_rate_micro() - m5.l1_hit_rate_micro()
+    assert drop_m < 0.01                                 # Mosaic does not
+
+
+# ----------------------------------------------------------------- fig 7
+
+
+def test_demand_paging_changes_little():
+    """Fig. 7: the transfer cost exists either way (paging on or off), so
+    weighted speedup barely moves.
+
+    Holds in the paper's steady-state regime (reuse >> cold faults); our
+    scaled traces need a reuse-heavy profile + longer run to be in it.
+    """
+    names = homogeneous_names("dct", 2)     # small ws, high reuse
+    on, _, _ = run_sim(names, "mosaic", mode="mosaic", paging=True,
+                       n_access=8000)
+    off, _, _ = run_sim(names, "mosaic", mode="mosaic", paging=False,
+                        n_access=8000)
+    ratio = ipcs(on).sum() / ipcs(off).sum()
+    assert 0.7 < ratio <= 1.001
+
+
+# ----------------------------------------------------------------- misc
+
+
+def test_mshr_merges_duplicate_walks():
+    """Two warps missing on the same page must share one walk."""
+    from repro.core.tlb_sim import AppTrace
+
+    vpn = np.zeros(64, np.int32)            # everyone hammers page 0
+    tr = AppTrace(vpn=vpn, ppn=vpn, frame=vpn // 512,
+                  coalesced=np.zeros(64, np.int8), gap_cycles=0)
+    cfg = SimConfig(mode="base", paging=False, warps_per_app=32)
+    sim = TranslationSim(cfg, [tr])
+    sim.run()
+    assert sim.walker.walks == 1            # merged by the MSHR
+
+
+def test_workload_registry_covers_27_apps():
+    assert len(APP_NAMES) == 27

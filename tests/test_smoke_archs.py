@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned arch: instantiate the REDUCED same-family config, run a
+train step (loss finite, grads finite) and a prefill + paged-decode step
+(shapes correct, no NaNs).  For families with an exact dense reference
+(dense/vlm/moe/mla/ssm/hybrid/encdec), decode-after-prefill is additionally
+checked against a full forward over the concatenated sequence — this is the
+end-to-end correctness proof that the Mosaic paged path preserves model
+semantics.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import LM
+from repro.models.common import cast
+
+from conftest import ctx_at_position, toy_page_ctx
+
+ARCHS = list_archs()
+B, T = 2, 64
+PTOK = 8          # page_tokens
+MPPS = 16         # max pages per sequence (single shard)
+
+
+def make_batch(cfg, key):
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(
+            key, (B, cfg.encdec.source_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def full_forward_last_logits(lm, params, batch, extra_tokens):
+    """Reference: run loss-path backbone over concatenated tokens."""
+    cfg = lm.cfg
+    tokens = jnp.concatenate([batch["tokens"], extra_tokens], axis=1)
+    b2 = dict(batch, tokens=tokens)
+    # Reuse the training forward to get last-position logits.
+    params = cast(params, jnp.dtype(cfg.dtype))
+    x = lm._embed(params, tokens)
+    n_prefix = 0
+    if cfg.family == "vlm":
+        pe = b2["patch_embeds"].astype(x.dtype)
+        pe = jnp.einsum("bpd,de->bpe", pe,
+                        params["frontend_proj"].astype(x.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 (x.shape[0], x.shape[1]))
+    if cfg.family == "encdec":
+        from repro.models import encdec as ed
+        src = b2["src_embeds"].astype(x.dtype)
+        src = jnp.einsum("bsd,de->bse", src,
+                         params["frontend_proj"].astype(x.dtype))
+        memory = ed.encoder_apply(cfg, params, src, remat=False)
+        x = ed.decoder_stack_train(cfg, params, x, positions, memory,
+                                   remat=False)
+    else:
+        x, _ = lm._backbone_train(params, x, positions, remat=False)
+    return lm._logits(params, x[:, -1:, :])[:, 0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    batch = make_batch(cfg, key)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss(p, batch), has_aux=True)(params)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert loss > 0
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn), f"{arch}: grads not finite"
+    assert gn > 0, f"{arch}: zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(1)
+    params = lm.init(key)
+    batch = make_batch(cfg, key)
+
+    # VLM prefill prepends the patch-embed prefix: the paged KV holds
+    # n_prefix + T tokens and decode positions are offset by n_prefix.
+    n_prefix = cfg.frontend_tokens if cfg.family == "vlm" else 0
+
+    shapes = lm.pool_shapes(B * MPPS, PTOK)
+    pools = (tuple(jnp.zeros(s.shape, s.dtype) for s in shapes)
+             if shapes else None)
+    ctx, _ = toy_page_ctx(B, n_prefix + T, PTOK, MPPS)
+    logits_p, pools, state = lm.prefill(params, batch, pools, ctx)
+    assert logits_p.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits_p.astype(jnp.float32)).all()
+
+    # Greedy-decode two tokens and compare each against the full forward.
+    new = jax.random.randint(jax.random.PRNGKey(2), (B, 2), 0,
+                             cfg.vocab_size)
+    logits_d = None
+    for i in range(2):
+        pos = jnp.full((B,), n_prefix + T + i, jnp.int32)
+        ctx_i = ctx_at_position(B, MPPS, PTOK, n_prefix + T + i)
+        logits_d, pools, state = lm.decode_step(
+            params, new[:, i], pos, pools, ctx_i, state)
+        assert jnp.isfinite(logits_d.astype(jnp.float32)).all()
+
+    ref = full_forward_last_logits(lm, params, batch, new)
+    err = jnp.max(jnp.abs(logits_d.astype(jnp.float32)
+                          - ref.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(ref.astype(jnp.float32))) + 1e-6
+    assert err / scale < 0.05, f"{arch}: decode/full mismatch {err} vs {scale}"
