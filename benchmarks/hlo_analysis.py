@@ -93,6 +93,45 @@ def _shape_bytes(s: str) -> int:
     return n * _DTYPE_BYTES.get(dt, 0)
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas.
+
+    Commas inside shape brackets (``f32[8,16]``) and layout braces
+    (``{1,0}``) are not separators — old XLA prints operands inline-typed
+    with both.
+    """
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _operand_parts(arg: str) -> Tuple[Optional[str], Optional[str]]:
+    """Split one operand of an op into (inline shape, name).
+
+    Newer XLA prints bare names (``%op.1``); older XLA prints the operand
+    inline-typed (``f32[8,16]{1,0} %op.1``).  Returns whichever parts are
+    present.
+    """
+    arg = arg.strip()
+    shape = None
+    if _SHAPE_RE.match(arg):
+        shape, _, arg = arg.rpartition(" ")
+        if not shape:           # shape only, no name
+            shape, arg = arg, ""
+    return shape or None, arg.lstrip("%") or None
+
+
 class HloProgram:
     def __init__(self, text: str):
         self.computations: Dict[str, List[str]] = {}
@@ -144,9 +183,9 @@ class HloProgram:
                         "|".join(COLLECTIVES), line)
         if not ops:
             return False
-        for a in ops.group(1).split(","):
-            a = a.strip().lstrip("%")
-            d = self.defs.get(a, "")
+        for a in _split_operands(ops.group(1)):
+            _, name = _operand_parts(a)
+            d = self.defs.get(name, "")
             cm = re.search(r"calls=%?([\w.\-]+)", d)
             if not cm:
                 return False
@@ -192,12 +231,15 @@ class HloProgram:
         out_shape = m.group(2).split(" ", 1)[0]
         _, out_n = _parse_shape(out_shape)
         # operands
-        ops = re.search(r"dot\(([^)]*)\)", line)
+        ops = re.search(r"dot\((.*)\)", line)
         if not ops:
             return 0.0
-        args = [a.strip().lstrip("%") for a in ops.group(1).split(",")]
-        lhs = args[0] if args else None
-        lhs_shape = self.shapes.get(lhs, "")
+        # Operands may be inline-typed (older XLA); commas inside shape
+        # brackets are not separators.
+        args = _split_operands(ops.group(1))
+        lhs_shape, lhs = _operand_parts(args[0]) if args else (None, None)
+        if lhs_shape is None:
+            lhs_shape = self.shapes.get(lhs, "")
         mm = _SHAPE_RE.match(lhs_shape)
         if not mm:
             return 0.0
@@ -253,10 +295,12 @@ class HloProgram:
                         "|".join(COLLECTIVES), line)
         total = 0
         if ops:
-            for a in ops.group(1).split(","):
-                a = a.strip().lstrip("%")
-                if a in self.shapes:
-                    total += _shape_bytes(self.shapes[a])
+            for a in _split_operands(ops.group(1)):
+                shape, name = _operand_parts(a)
+                if shape is None and name in self.shapes:
+                    shape = self.shapes[name]
+                if shape:
+                    total += _shape_bytes(shape)
         if total == 0:
             out = m.group(2).split(" ", 1)[0]
             if out.startswith("("):

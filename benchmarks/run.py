@@ -11,6 +11,7 @@ Suites:
   kernels  paged-attention granularity + CAC copy cost    (beyond paper)
   pagesize TPU-native page-size trade-off                 (paper §1)
   serving  Mosaic vs GPU-MMU on the serving engine        (Figs. 5/6 analogue)
+  oversub  2x-oversubscribed host-tier paging + swap cycle (paper §1/§4.2)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary.
@@ -51,6 +52,8 @@ def main(argv=None):
                             + kernel_bench.page_compact_cost()),
         "pagesize": kernel_bench.pagesize_sweep,
         "serving": serving_bench.serving_compare,
+        "oversub": lambda: (serving_bench.oversubscribed_compare()
+                            + serving_bench.swap_cycle_compare()),
     }
     picked = (args.only.split(",") if args.only else list(suites))
 

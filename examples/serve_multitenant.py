@@ -7,7 +7,16 @@ tokens/s, coalesced fraction (TLB-reach analogue), CAC compaction traffic,
 and verifies the outputs are bit-identical — the manager is
 application-transparent, the paper's headline property.
 
+With ``--oversubscribe F`` the pool holds only 1/F of the sized-for-peak
+KV working set (DESIGN.md §6): low-priority requests get preempted to the
+host tier under pool pressure and resumed later via base-page demand
+fault-in; the report adds swap counts, faults, merged-DMA counts and
+modeled I/O-bus microseconds — and the outputs still match the
+pressure-free run token-for-token.
+
     PYTHONPATH=src python examples/serve_multitenant.py --requests 10
+    PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
+        --oversubscribe 2
 """
 
 import argparse
@@ -19,22 +28,29 @@ from repro.configs.base import PoolGeometry
 from repro.serving.engine import Request, ServingEngine
 
 
-def run(manager_kind: str, n_requests: int, seed: int):
+def run(manager_kind: str, n_requests: int, seed: int,
+        oversubscribe: float = 1.0):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
     eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
-                        manager_kind=manager_kind, seed=seed)
+                        manager_kind=manager_kind, seed=seed,
+                        oversubscription=oversubscribe)
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
-        T = int(rng.integers(16, 72))
+        T = int(rng.integers(16, 72)) if oversubscribe == 1.0 \
+            else int(rng.integers(56, 104))
         reqs.append(Request(
             rid=i, tenant=i % 3,
+            # Tenant 0 is the premium tier: its requests are never the
+            # preemption victim while lower tiers are runnable.
+            priority=1 if i % 3 == 0 else 0,
             prompt=rng.integers(0, cfg.vocab_size, T).astype(np.int32),
             max_new=int(rng.integers(4, 12))))
     for r in reqs:
         eng.submit(r)
-    steps = eng.run_until_drained()
+    steps = eng.run_until_drained(max_steps=5000)
+    assert all(r.done for r in reqs)
     return eng, reqs, steps
 
 
@@ -42,17 +58,27 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="pool = sized-for-peak working set / this factor")
     args = ap.parse_args()
 
     results = {}
     for kind in ("mosaic", "gpu-mmu"):
-        eng, reqs, steps = run(kind, args.requests, args.seed)
+        eng, reqs, steps = run(kind, args.requests, args.seed,
+                               args.oversubscribe)
         st = eng.cache.stats()
-        print(f"[{kind:8}] {steps} engine steps | "
-              f"{eng.stats.tok_per_s():7.1f} tok/s (CPU) | "
-              f"coalesced {eng.stats.coalesced_mean:5.1%} | "
-              f"CAC copies {eng.stats.compaction_copies} | "
-              f"bloat {st.get('memory_bloat', 1):.2f}")
+        s = eng.stats
+        line = (f"[{kind:8}] {steps} engine steps | "
+                f"{s.tok_per_s():7.1f} tok/s (CPU) | "
+                f"coalesced {s.coalesced_mean:5.1%} | "
+                f"CAC copies {s.compaction_copies} | "
+                f"bloat {st.get('memory_bloat', 1):.2f}")
+        if args.oversubscribe > 1.0:
+            line += (f" | swaps {s.swaps_out}/{s.swaps_in} | "
+                     f"faults {s.faults} in {s.fault_dmas} DMAs | "
+                     f"{s.bytes_in / 1024:.0f} KiB in | "
+                     f"{s.transfer_us:.0f} us bus")
+        print(line)
         results[kind] = {r.rid: tuple(r.out) for r in reqs}
 
     same = results["mosaic"] == results["gpu-mmu"]

@@ -1,0 +1,113 @@
+"""Version-compat shims for the installed jax.
+
+Three APIs this repo relies on moved (or appeared) across recent jax
+releases; import them from here so the repo runs on either side:
+
+* ``shard_map``: ``jax.experimental.shard_map`` → top-level ``jax``;
+* ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``):
+  new in jax 0.5-era releases — older jax has ``jax.make_mesh`` without
+  the ``axis_types`` kwarg, which is equivalent to all-Auto;
+* ``jax.sharding.set_mesh``: older jax spells the ambient-mesh context as
+  ``with mesh:`` (Mesh is itself a context manager).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+
+import jax
+
+try:  # jax >= 0.5 (also present in some late 0.4.x releases)
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, *args, **kwargs):
+    # New jax renamed check_rep -> check_vma; accept either spelling.
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, *args, **kwargs)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with all-Auto axis types on any jax version."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):  # pragma: no cover - version dependent
+        return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    setter = getattr(jax.sharding, "set_mesh", None)
+    if setter is not None:  # pragma: no cover - version dependent
+        return setter(mesh)
+    # Older jax: Mesh is a context manager establishing the resource env.
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
+
+
+def get_abstract_mesh():
+    """Ambient mesh, or None — older jax lacks ``get_abstract_mesh``."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:  # pragma: no cover - version dependent
+        return getter()
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - private-API drift
+        return None
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis — ``jax.lax.axis_size`` is new-jax only."""
+    if hasattr(jax.lax, "axis_size"):  # pragma: no cover - version dependent
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # pragma: no cover - version dependent
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def _native_barrier_differentiable() -> bool:
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x))(0.0)
+        return True
+    except NotImplementedError:  # pragma: no cover - version dependent
+        return False
+
+
+if _native_barrier_differentiable():  # pragma: no cover - version dependent
+    optimization_barrier = jax.lax.optimization_barrier
+else:
+    # Older jax has no differentiation rule for the primitive; supply the
+    # one new jax ships (barrier forward, barrier on the cotangent).
+    @jax.custom_vjp
+    def optimization_barrier(x):
+        return jax.lax.optimization_barrier(x)
+
+    def _barrier_fwd(x):
+        return jax.lax.optimization_barrier(x), None
+
+    def _barrier_bwd(_, g):
+        return (jax.lax.optimization_barrier(g),)
+
+    optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "get_abstract_mesh",
+           "optimization_barrier"]

@@ -18,18 +18,25 @@ from repro.core.coalescer import InPlaceCoalescer
 from repro.core.compaction import CAC, CompactionPlan, CopyOp
 from repro.core.manager import MosaicManager, pages_for_tokens
 from repro.core.baseline_mmu import BaselineMMU
-from repro.core.demand_paging import LinkModel, ResidencyTracker, FaultBatch
+from repro.core.demand_paging import (
+    FaultBatch,
+    LinkModel,
+    ResidencyTracker,
+    contiguous_runs,
+)
 
 MANAGERS = {"mosaic": MosaicManager, "gpu-mmu": BaselineMMU}
 
 
-def make_manager(kind: str, config: PoolConfig):
-    return MANAGERS[kind](config)
+def make_manager(kind: str, config: PoolConfig, *, link=None,
+                 page_bytes: int = 0):
+    return MANAGERS[kind](config, link=link, page_bytes=page_bytes)
 
 
 __all__ = [
     "PagePool", "PoolConfig", "PageTable", "pack_batch_tables", "UNMAPPED",
     "CoCoA", "OutOfMemory", "InPlaceCoalescer", "CAC", "CompactionPlan",
     "CopyOp", "MosaicManager", "BaselineMMU", "MANAGERS", "make_manager",
-    "LinkModel", "ResidencyTracker", "FaultBatch", "pages_for_tokens",
+    "LinkModel", "ResidencyTracker", "FaultBatch", "contiguous_runs",
+    "pages_for_tokens",
 ]

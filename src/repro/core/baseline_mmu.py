@@ -27,6 +27,11 @@ from repro.core import page_table as pt
 from repro.core.compaction import CompactionPlan, CopyOp
 from repro.core.cocoa import OutOfMemory
 from repro.core.coalescer import InPlaceCoalescer
+from repro.core.demand_paging import (
+    DEFAULT_PAGE_BYTES,
+    LinkModel,
+    ResidencyTracker,
+)
 from repro.core.pagepool import FREE, PagePool, PoolConfig
 
 _POOL_OWNER = 0  # PagePool sees one pseudo-owner; real owners tracked here.
@@ -35,10 +40,16 @@ _POOL_OWNER = 0  # PagePool sees one pseudo-owner; real owners tracked here.
 class BaselineMMU:
     name = "gpu-mmu"
 
-    def __init__(self, config: PoolConfig):
+    def __init__(self, config: PoolConfig, *,
+                 link: "LinkModel | None" = None, page_bytes: int = 0):
         self.config = config
         self.pool = PagePool(config)
         self.coalescer = InPlaceCoalescer(self.pool)
+        # Same residency hooks as MosaicManager (DESIGN.md §6): demand
+        # paging is manager-agnostic; only page *placement* differs, which
+        # is exactly what the fault-DMA accounting measures.
+        self.residency = ResidencyTracker(
+            config.num_pages, page_bytes or DEFAULT_PAGE_BYTES, link)
         self.tables: Dict[int, pt.PageTable] = {}
         self.seq_tokens: Dict[int, int] = {}
         self.rmap: Dict[int, Tuple[int, int]] = {}
@@ -78,6 +89,7 @@ class BaselineMMU:
             self.pool.take_specific_frame(f, _POOL_OWNER)
         self.pool.alloc_page(f, self.pool.slot_of(ppn))
         self.frame_owner_sets[f].add(owner)
+        self.residency.mark_resident([ppn])
         return ppn
 
     def allocate_tokens(self, owner: int, n_tokens: int) -> List[int]:
@@ -119,6 +131,7 @@ class BaselineMMU:
         f = self.pool.frame_of(ppn)
         self.pool.free_page(ppn)  # releases the frame if it empties
         self.rmap.pop(ppn, None)
+        self.residency.release([ppn])
         heapq.heappush(self._free_pages, ppn)
         owners_left = {
             self.rmap[p][0]
@@ -177,6 +190,7 @@ class BaselineMMU:
             multi_owner_frames=self.multi_owner_frames(),
             coalesce_opportunities=self.coalesce_opportunities,
         )
+        s.update(self.residency.stats)
         return s
 
     def check_invariants(self) -> None:
@@ -190,3 +204,6 @@ class BaselineMMU:
                 assert self.rmap.get(ppn) == (owner, vpn)
                 assert self.pool.page_allocated[ppn]
         assert len(seen) == len(self.rmap)
+        assert not (self.residency.resident
+                    & ~self.pool.page_allocated).any(), \
+            "resident bit on unallocated page"

@@ -20,6 +20,11 @@ from repro.core import page_table as pt
 from repro.core.coalescer import InPlaceCoalescer
 from repro.core.cocoa import CoCoA, OutOfMemory
 from repro.core.compaction import CAC, CompactionPlan, CopyOp
+from repro.core.demand_paging import (
+    DEFAULT_PAGE_BYTES,
+    LinkModel,
+    ResidencyTracker,
+)
 from repro.core.pagepool import PagePool, PoolConfig
 
 
@@ -30,7 +35,8 @@ def pages_for_tokens(n_tokens: int, page_tokens: int) -> int:
 class MosaicManager:
     name = "mosaic"
 
-    def __init__(self, config: PoolConfig):
+    def __init__(self, config: PoolConfig, *,
+                 link: Optional[LinkModel] = None, page_bytes: int = 0):
         self.config = config
         self.pool = PagePool(config)
         self.coalescer = InPlaceCoalescer(self.pool)
@@ -40,6 +46,10 @@ class MosaicManager:
         self.seq_tokens: Dict[int, int] = {}
         self.rmap: Dict[int, Tuple[int, int]] = {}
         self._pending_copies: List[CopyOp] = []
+        # Host-tier residency (DESIGN.md §6): same hooks as BaselineMMU so
+        # engines/benchmarks measure demand paging under either manager.
+        self.residency = ResidencyTracker(
+            config.num_pages, page_bytes or DEFAULT_PAGE_BYTES, link)
 
     # -- owner lifecycle ---------------------------------------------------------
 
@@ -68,6 +78,7 @@ class MosaicManager:
         )
         for vpn in vpns:
             self.rmap[table.ppn[vpn]] = (owner, vpn)
+        self.residency.mark_resident([table.ppn[v] for v in vpns])
         self.seq_tokens[owner] += n_tokens
         return vpns
 
@@ -82,6 +93,7 @@ class MosaicManager:
                     owner, lambda: self.cocoa.append_page(owner, table)
                 )
                 self.rmap[table.ppn[vpn]] = (owner, vpn)
+                self.residency.mark_resident([table.ppn[vpn]])
                 new_vpns.append(vpn)
             self.seq_tokens[owner] = tok + 1
         return new_vpns
@@ -105,6 +117,7 @@ class MosaicManager:
             ppn = table.unmap(vpn)
             self.rmap.pop(ppn, None)
             self.pool.free_page(ppn)
+            self.residency.release([ppn])
         self.compact(owner)
 
     def deallocate(self, owner: int) -> None:
@@ -116,6 +129,7 @@ class MosaicManager:
             ppn = table.unmap(vpn)
             self.rmap.pop(ppn, None)
             self.pool.free_page(ppn)
+            self.residency.release([ppn])
         self.seq_tokens.pop(owner, None)
         self.cocoa.forget_owner(owner)
 
@@ -125,6 +139,10 @@ class MosaicManager:
         if owner not in self.tables:
             return CompactionPlan([], [])
         plan = self.cac.compact_owner(owner, self.tables[owner], self.rmap)
+        for op in plan.copies:
+            # Residency moves with the payload: a host-backed (non-resident)
+            # page stays host-backed at its new physical location.
+            self.residency.on_copy(op.src_ppn, op.dst_ppn)
         self._pending_copies.extend(plan.copies)
         return plan
 
@@ -154,6 +172,7 @@ class MosaicManager:
             memory_bloat=self.pool.memory_bloat(),
             owners=len(self.tables),
         )
+        s.update(self.residency.stats)
         return s
 
     def check_invariants(self) -> None:
@@ -175,3 +194,7 @@ class MosaicManager:
                     ok, _ = table.vframe_contiguous_aligned(vf)
                     assert ok, "coalesced bit on non-contiguous vframe"
         assert len(seen) == len(self.rmap), "stale rmap entries"
+        # Residency ⊆ allocation: a free page never claims a device payload.
+        assert not (self.residency.resident
+                    & ~self.pool.page_allocated).any(), \
+            "resident bit on unallocated page"

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -130,7 +132,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
             pltpu.VMEM((g * bq,), jnp.float32),
             pltpu.VMEM((g * bq, dh_v), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qb, kr, vr)

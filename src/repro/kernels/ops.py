@@ -17,7 +17,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
-from repro.kernels.page_compact import page_compact as _compact_kernel
+from repro.kernels.page_compact import (
+    page_compact as _compact_kernel,
+    page_gather as _gather_kernel,
+    page_scatter as _scatter_kernel,
+)
 from repro.kernels.paged_attention import (
     combine_granularities,
     paged_attention_kernel,
@@ -81,6 +85,24 @@ def page_compact(pool, src, dst, *, use_pallas: bool = True,
     if use_pallas:
         return _compact_kernel(pool, src, dst, interpret=interpret)
     return ref.page_compact_ref(pool, src, dst)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def page_gather(pool, idx, *, use_pallas: bool = True,
+                interpret: bool = True):
+    """Host-tier eviction gather: pages[i] = pool[idx[i]] (DESIGN.md §6)."""
+    if use_pallas:
+        return _gather_kernel(pool, idx, interpret=interpret)
+    return ref.page_gather_ref(pool, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def page_scatter(pool, idx, pages, *, use_pallas: bool = True,
+                 interpret: bool = True):
+    """Host-tier fault-in scatter: pool[idx[i]] = pages[i] (DESIGN.md §6)."""
+    if use_pallas:
+        return _scatter_kernel(pool, idx, pages, interpret=interpret)
+    return ref.page_scatter_ref(pool, idx, pages)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -173,7 +175,7 @@ def paged_attention_kernel(
             jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
             jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(tables, ntok, qg, pk, pv)

@@ -46,6 +46,25 @@ def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk, h0=None):
     return ssd_chunked(x, dt, A, Bm, Cm, chunk, h0=h0)
 
 
+def page_gather_ref(pool, idx):
+    """Oracle for the host-tier gather kernel: pages[i] = pool[idx[i]].
+
+    Holes (idx == -1) return page 0 (callers mask them out).
+    """
+    return pool[jnp.maximum(idx, 0)]
+
+
+def page_scatter_ref(pool, idx, pages):
+    """Oracle for the host-tier scatter kernel: pool[idx[i]] = pages[i].
+
+    Entries with idx == -1 are no-ops (scatter-dropped past the pool end).
+    """
+    d = jnp.where(idx >= 0, idx, pool.shape[0])
+    padded = jnp.concatenate(
+        [pool, jnp.zeros((1, *pool.shape[1:]), pool.dtype)], axis=0)
+    return padded.at[d].set(pages.astype(pool.dtype))[:-1]
+
+
 def page_compact_ref(pool, src, dst):
     """Oracle for the CAC page-copy kernel: pool[dst[i]] = pool[src[i]].
 

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -102,7 +104,7 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, h0=None,
             jax.ShapeDtypeStruct((Bsz, nh, hd, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm, h0)

@@ -85,6 +85,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              remat: str = "block", tp: int = 0,
              microbatch: int = 0, grad_compress: bool = False):
     import jax
+    from repro import compat
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import build_cell
     from repro.configs import get_config, SHAPES
@@ -102,14 +103,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         shape_axes = ((2, per_pod, tp) if multi_pod else (per_pod, tp))
         names = (("pod", "data", "model") if multi_pod
                  else ("data", "model"))
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh(shape_axes, names,
-                             axis_types=(AxisType.Auto,) * len(names))
+        from repro.compat import make_mesh
+        mesh = make_mesh(shape_axes, names)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         cell = build_cell(arch, shape_name, mesh, hp=hp)
         jitted = jax.jit(
             cell["fn"],
@@ -123,8 +123,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     # --- per-device memory: XLA buffer assignment (proves the cell fits).
     mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    peak_is_estimate = peak is None
+    if peak is None:
+        # Older jax exposes no true peak; temp+args+out is a loose upper
+        # bound (no liveness/buffer-sharing), flagged so consumers don't
+        # treat it as the XLA buffer-assignment peak.
+        peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                + mem.output_size_in_bytes)
     mem_rec = {
-        "peak": int(mem.peak_memory_in_bytes),
+        "peak": int(peak),
+        "peak_is_estimate": peak_is_estimate,
         "args": int(mem.argument_size_in_bytes),
         "out": int(mem.output_size_in_bytes),
         "alias": int(mem.alias_size_in_bytes),
@@ -137,6 +146,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # trip-count multipliers instead; the raw XLA numbers are recorded
     # alongside for reference.
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps it in a list
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     colls = {}
     hlo_flops = xla_flops

@@ -14,12 +14,8 @@ the tensor/expert-parallel axis kept inside an ICI-adjacent 16-chip ring.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-
-def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+from repro.compat import make_mesh as _mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

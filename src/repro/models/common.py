@@ -68,7 +68,8 @@ def shd(x: jax.Array, *spec) -> jax.Array:
     head-sharding hint degrades to replicated under fsdp, where 'model'
     belongs to the batch).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)
@@ -101,7 +102,8 @@ def psum_point(x: jax.Array) -> jax.Array:
     barrier is linear, so its transpose pins the backward all-reduce at
     the cotangent's dtype at the same point.
     """
-    return jax.lax.optimization_barrier(x)
+    from repro.compat import optimization_barrier
+    return optimization_barrier(x)
 
 
 def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):

@@ -30,7 +30,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import get_abstract_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -85,7 +85,7 @@ def capacity(S: int, E: int, top_k: int, cf: float) -> int:
 
 
 def _ambient_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     return None if (mesh is None or mesh.empty) else mesh
 
 

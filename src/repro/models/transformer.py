@@ -22,7 +22,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro import compat
+from repro.compat import get_abstract_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -95,7 +96,7 @@ jax.tree_util.register_dataclass(
 
 
 def _ambient_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     return None if (mesh is None or mesh.empty) else mesh
 
 
@@ -328,7 +329,7 @@ def prefill_write_op(k_seq, v_seq, k_pool, v_pool, ctx: PageCtx):
         tables = tables.reshape(tables.shape[0], -1)
         shard, n_shards = 0, 1
         for a in axes:
-            n = jax.lax.axis_size(a)
+            n = compat.axis_size(a)
             shard = shard * n + jax.lax.axis_index(a)
             n_shards *= n
         return paged.write_prefill_kv(

@@ -10,6 +10,17 @@ share one physical pool; the manager flag flips between ``mosaic`` and the
 ``gpu-mmu`` baseline so benchmarks can measure both (Figs. 5/6 analogue:
 same workload, different manager).
 
+Host tier (DESIGN.md §6): the pool may be *oversubscribed* — sized below
+the workload's peak KV working set.  Each step ``touch()``es the pages its
+packed tables will read and batch-faults the missing ones in from the
+:class:`~repro.serving.host_tier.HostPageStore` as one gather-transfer
+(contiguous runs merge into single DMAs — Mosaic's contiguity pays on the
+I/O bus too).  When an allocation hits ``OutOfMemory`` even after CAC
+compaction, the engine preempts the lowest-priority active request —
+evicting its frames to the host store at base-page granularity — instead
+of failing, and resumes it later via demand fault-in; a resumed request
+produces exactly the tokens it would have produced unpreempted.
+
 The engine is deliberately host-driven: page tables are packed on host per
 step (Mosaic's runtime half), while the device step (prefill/decode +
 pool writes) is a single jitted call (the hardware half).
@@ -27,8 +38,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, PoolGeometry
+from repro.core.cocoa import OutOfMemory
+from repro.core.demand_paging import LinkModel
 from repro.kernels import ops as kops
 from repro.models.lm import LM
+from repro.serving.host_tier import HostPageStore
 from repro.serving.kv_cache import ShardedKVCache
 
 
@@ -38,8 +52,10 @@ class Request:
     tenant: int
     prompt: np.ndarray           # int32 [T]
     max_new: int
+    priority: int = 0            # higher = more important (preempt lowest)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -51,6 +67,14 @@ class EngineStats:
     wall_s: float = 0.0
     coalesced_sum: float = 0.0   # running sum of per-step coalesced fraction
     occupancy_sum: float = 0.0
+    # Host-tier demand paging (DESIGN.md §6).
+    faults: int = 0              # base pages faulted in
+    fault_dmas: int = 0          # DMA descriptors (contiguous runs)
+    fault_steps: int = 0         # engine steps that faulted at all
+    bytes_in: int = 0
+    transfer_us: float = 0.0
+    swaps_out: int = 0           # whole-request preemptions
+    swaps_in: int = 0            # whole-request resumes
 
     @property
     def coalesced_mean(self) -> float:
@@ -69,7 +93,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, geometry: PoolGeometry,
                  max_batch: int, max_seq: int, manager_kind: str = "mosaic",
                  n_shards: int = 1, params=None, seed: int = 0,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, oversubscription: float = 1.0,
+                 link: Optional[LinkModel] = None):
         self.cfg = cfg
         self.lm = LM(cfg)
         self.geo = geometry
@@ -81,11 +106,27 @@ class ServingEngine:
         self.mpps = int(np.ceil(pages_per_seq / n_shards
                                 / geometry.frame_pages)
                         ) * geometry.frame_pages
-        per_shard = int(geometry.pages_for(max_seq, max_batch) / n_shards)
+        # oversubscription > 1 shrinks HBM below the sized-for-peak working
+        # set; the host tier absorbs the overflow (DESIGN.md §6).
+        per_shard = int(geometry.pages_for(max_seq, max_batch) / n_shards
+                        / max(oversubscription, 1e-9))
+        per_shard = max(per_shard, self.mpps)  # ≥ one max-length sequence
         per_shard = ((per_shard + geometry.frame_pages - 1)
                      // geometry.frame_pages) * geometry.frame_pages
+        probe = self.lm.pool_shapes(1, geometry.page_tokens)
+        if probe:
+            # True KV bytes of one base page across all layers (k + v).
+            page_bytes = sum(
+                int(np.prod(s.shape[2:])) * s.shape[0]
+                * np.dtype(s.dtype).itemsize for s in probe)
+        else:
+            page_bytes = 0      # attention-free: nominal paper default
+        self.page_bytes = page_bytes
+        self.link = link or LinkModel()
         self.cache = ShardedKVCache(geometry, per_shard, n_shards,
-                                    manager_kind)
+                                    manager_kind, link=self.link,
+                                    page_bytes=page_bytes)
+        self.host = HostPageStore()
         self.params = params if params is not None else self.lm.init(
             jax.random.PRNGKey(seed))
         shapes = self.lm.pool_shapes(per_shard * n_shards,
@@ -94,7 +135,11 @@ class ServingEngine:
                       if shapes else None)
         self.states: Dict[int, dict] = {}
         self.queue: Deque[Request] = deque()
+        self.preempted: Deque[Request] = deque()
+        self._held: List[Request] = []
+        self._saved_tokens: Dict[int, int] = {}
         self.active: List[Request] = []
+        self._stalled_steps = 0      # consecutive no-decode steps
         self.stats = EngineStats()
         self._decode_jit = jax.jit(
             lambda p, t, pos, pools, ctx, st: self.lm.decode_step(
@@ -106,20 +151,232 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
-        while self.queue and len(self.active) < self.max_batch:
-            req = self.queue.popleft()
-            self._prefill(req)
-            self.active.append(req)
+        # One admission order across resumes and new arrivals: highest
+        # priority first; within a tier, resumes beat arrivals (they are
+        # older and already hold host payloads + decode state), and both
+        # pools are FIFO (max() is stable).  This keeps a premium arrival
+        # from being head-of-line blocked behind an unadmittable
+        # best-effort request — in either pool.
+        skipped: set = set()     # failed this round; don't block the rest
+        while True:
+            cand = max((r for r in self.preempted
+                        if r.rid not in skipped),
+                       key=lambda r: r.priority, default=None)
+            queued = max((r for r in self.queue if r.rid not in skipped),
+                         key=lambda r: r.priority, default=None)
+            resume = cand is not None and (
+                queued is None or cand.priority >= queued.priority)
+            if not resume:
+                cand = queued
+            if cand is None:
+                break
+            if len(self.active) >= self.max_batch:
+                # Batch slots are a resource too: a premium candidate
+                # displaces a strictly-lower-priority active request (the
+                # strictness makes displacement chains terminate).  With a
+                # full batch and no displaceable victim, no lower-priority
+                # candidate can enter either — stop the round.
+                victim = self._pick_victim(below_priority=cand.priority)
+                if victim is None:
+                    break
+                self._preempt(victim)
+            ok = self._resume(cand) if resume else self._admit_one(cand)
+            if not ok:
+                # Memory can't fit this candidate right now; a smaller or
+                # lower-priority one may still fill the idle capacity (and
+                # any victims it preempted in vain resume right here).
+                skipped.add(cand.rid)
+                continue
+            (self.preempted if resume else self.queue).remove(cand)
+            self.active.append(cand)
+        if not self.active and (self.queue or self.preempted):
+            raise RuntimeError(
+                "pool cannot hold a single request: shrink max_seq or grow "
+                "the pool (oversubscription too aggressive)")
+
+    # --------------------------------------------------- preemption / resume
+
+    def _pick_victim(self, *, below_priority: Optional[int] = None,
+                     exclude: Tuple[int, ...] = ()) -> Optional[Request]:
+        """Lowest-priority active request (ties → youngest = highest rid)."""
+        cands = [r for r in self.active if r.rid not in exclude]
+        if below_priority is not None:
+            cands = [r for r in cands if r.priority < below_priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority, -r.rid))
+
+    def _alloc_with_preemption(self, req: Request, n_tokens: int, *,
+                               below_priority: Optional[int],
+                               exclude: Tuple[int, ...] = ()) -> bool:
+        """Allocate with growth headroom, preempting victims as needed.
+
+        The growth guard is part of the loop: when an allocation succeeds
+        but would leave no room for one decode step of the batch, another
+        victim is evicted and the allocation retried — so victims are only
+        ever swapped out on a path that ends in admission, never stranded
+        by a post-hoc guard failure.  Returns False (leaving ``req``
+        unallocated) when no victim remains.
+        """
+        while True:
+            try:
+                self.cache.allocate(req.rid, n_tokens)
+            except OutOfMemory:
+                # Roll back the partial allocation before retrying.
+                self.cache.free(req.rid)
+                victim = self._pick_victim(below_priority=below_priority,
+                                           exclude=exclude + (req.rid,))
+                if victim is None:
+                    return False
+                self._preempt(victim)
+                continue
+            if self._growth_guard_ok(req):
+                return True
+            # Allocated but starved of growth headroom (resume↔preempt
+            # livelock otherwise): evict one more victim and re-place.
+            self.cache.free(req.rid)
+            victim = self._pick_victim(below_priority=below_priority,
+                                       exclude=exclude + (req.rid,))
+            if victim is None:
+                return False
+            self._preempt(victim)
+
+    def _preempt(self, victim: Request) -> None:
+        """Swap a request out: frames → host store at base-page granularity,
+        decode state retained host-side, pages freed for other tenants."""
+        rid = victim.rid
+        # Pending compaction plans rewrote tables already; land the payload
+        # copies before gathering through those tables.
+        self._run_compaction()
+        pages = self.cache.mapped_pages(rid)     # [(shard, vpn, ppn)]
+        # A just-resumed victim may still hold non-resident pages whose
+        # payloads never left the host store — gather only resident ones
+        # (the rest keep their existing host copies).
+        resident = [
+            (s, vpn, ppn) for s, vpn, ppn in pages
+            if self.cache.mgrs[s].residency.resident[ppn]
+        ]
+        if resident and self.pools is not None:
+            pps = self.cache.pages_per_shard
+            gidx = jnp.asarray([s * pps + ppn for s, _v, ppn in resident],
+                               jnp.int32)
+            k, v = self.pools
+            kp = jax.vmap(lambda pool: kops.page_gather(
+                pool, gidx, use_pallas=self.use_pallas))(k)
+            vp = jax.vmap(lambda pool: kops.page_gather(
+                pool, gidx, use_pallas=self.use_pallas))(v)
+            kp, vp = np.asarray(kp), np.asarray(vp)   # [L, n, ptok, kv, dh]
+            for i, (s, vpn, _ppn) in enumerate(resident):
+                self.host.put(rid, s, vpn, kp[:, i], vp[:, i])
+        self.cache.evict_pages(resident)
+        self._saved_tokens[rid] = self.cache.seq_tokens[rid]
+        self.cache.free(rid)
+        self.active.remove(victim)
+        victim.preemptions += 1
+        self.preempted.append(victim)
+        self.host.note_swap_out()
+        self.stats.swaps_out += 1
+
+    def preempt(self, rid: int, *, hold: bool = False) -> bool:
+        """Proactively swap an active request out (external-scheduler hook,
+        cf. proactive memory scheduling).  It resumes automatically when
+        capacity allows, unless ``hold`` is set — a held request stays
+        swapped out until :meth:`release`.  Returns False if ``rid`` is not
+        active."""
+        for r in self.active:
+            if r.rid == rid:
+                self._preempt(r)
+                if hold:
+                    self.preempted.remove(r)
+                    self._held.append(r)
+                return True
+        return False
+
+    def release(self, rid: int) -> bool:
+        """Make a held request eligible for resume again."""
+        for r in self._held:
+            if r.rid == rid:
+                self._held.remove(r)
+                self.preempted.append(r)
+                return True
+        return False
+
+    def _free_pages_total(self) -> int:
+        return sum(m.config.num_pages - int(m.pool.page_allocated.sum())
+                   for m in self.cache.mgrs)
+
+    def _growth_guard_ok(self, req: Request) -> bool:
+        """Admitting ``req`` must leave room for ≥ one decode step of the
+        whole batch, or the newcomer would be preempted again before
+        producing a token (resume↔preempt livelock)."""
+        if not self.active:
+            return True          # a sole request always fits (pool ≥ mpps)
+        return self._free_pages_total() >= len(self.active) + 2
+
+    def _resume(self, req: Request) -> bool:
+        """Re-map a preempted request; payloads fault in on next touch."""
+        tokens = self._saved_tokens[req.rid]
+        if not self._alloc_with_preemption(req, tokens,
+                                           below_priority=req.priority):
+            return False
+        # Allocation under pressure may have planned compaction: execute the
+        # copies before anything reads the rewritten tables.
+        self._run_compaction()
+        self.cache.demote_host_backed(req.rid, self.host)
+        del self._saved_tokens[req.rid]
+        self.host.note_swap_in()
+        self.stats.swaps_in += 1
+        return True
+
+    def _admit_one(self, req: Request) -> bool:
+        ptok = self.geo.page_tokens
+        T = len(req.prompt)
+        n_prefix = (self.cfg.frontend_tokens
+                    if self.cfg.family == "vlm" else 0)
+        if not self._alloc_with_preemption(req, n_prefix + T,
+                                           below_priority=req.priority):
+            return False
+        self._prefill(req)
+        return True
+
+    # --------------------------------------------------- demand fault-in
+
+    def _fault_in(self, seqs: List[int]) -> None:
+        """touch() this step's pages; batch-fault the missing ones in."""
+        missing = self.cache.missing_pages(seqs)
+        if not missing:
+            return
+        pps = self.cache.pages_per_shard
+        gidx: List[int] = []
+        payloads: List[Tuple[np.ndarray, np.ndarray]] = []
+        for s, entries in missing.items():
+            batch = self.cache.mgrs[s].residency.fault_in(
+                [ppn for ppn, _o, _v in entries])
+            self.stats.faults += len(batch.ppns)
+            self.stats.fault_dmas += batch.dma_count
+            self.stats.bytes_in += batch.nbytes
+            self.stats.transfer_us += batch.transfer_us
+            for ppn, owner, vpn in entries:
+                gidx.append(s * pps + ppn)
+                payloads.append(self.host.pop(owner, s, vpn))
+        self.stats.fault_steps += 1
+        if self.pools is None or not gidx:
+            return
+        idx = jnp.asarray(gidx, jnp.int32)
+        kp = jnp.asarray(np.stack([p[0] for p in payloads], axis=1))
+        vp = jnp.asarray(np.stack([p[1] for p in payloads], axis=1))
+        k, v = self.pools
+        k = jax.vmap(lambda pool, pages: kops.page_scatter(
+            pool, idx, pages, use_pallas=self.use_pallas))(k, kp)
+        v = jax.vmap(lambda pool, pages: kops.page_scatter(
+            pool, idx, pages, use_pallas=self.use_pallas))(v, vp)
+        self.pools = (k, v)
 
     def _prefill(self, req: Request):
+        """Run prefill for an already-allocated request (see _admit_one)."""
         ptok = self.geo.page_tokens
         T = len(req.prompt)
         Tpad = ((T + ptok - 1) // ptok) * ptok
-        # VLM: patch-embedding prefix occupies KV positions before the text
-        # (frontend_tokens is page-aligned in all full configs).
-        n_prefix = (self.cfg.frontend_tokens
-                    if self.cfg.family == "vlm" else 0)
-        self.cache.allocate(req.rid, n_prefix + T)
         # Allocation under memory pressure may have compacted: the tables
         # already point at the new locations, so the data copies must land
         # BEFORE the device reads them (and before the pages freed by
@@ -169,31 +426,83 @@ class ServingEngine:
 
     # ------------------------------------------------------------- stepping
 
+    def _append_with_preemption(self) -> List[Request]:
+        """Grow active requests by one token slot, highest priority first.
+
+        Under pool pressure a request may displace peers of its own tier or
+        below (never a higher-priority one); with no displaceable victim it
+        *stalls* — keeps its pages but sits this step out.  If nobody can
+        grow, the lowest-priority request is forcibly swapped out so the
+        rest make progress next step.  Returns this step's decode batch.
+        """
+        order = sorted(self.active, key=lambda r: -r.priority)  # stable
+        appended: List[Request] = []
+        for r in order:
+            if r not in self.active:
+                continue            # preempted as someone else's victim
+            while r in self.active:
+                try:
+                    self.cache.append(r.rid, 1)
+                    appended.append(r)
+                    break
+                except OutOfMemory:
+                    victim = self._pick_victim(
+                        below_priority=r.priority + 1,
+                        exclude=tuple(a.rid for a in appended) + (r.rid,))
+                    if victim is None:
+                        break       # stall: retry next step
+                    self._preempt(victim)
+        if not appended and self.active:
+            victim = self._pick_victim()
+            if victim is not None and len(self.active) > 1:
+                self._preempt(victim)
+        return [r for r in self.active if r in appended]
+
     def step(self):
         """One engine iteration: admit, one batched decode step, retire."""
         t0 = time.time()
         self._admit()
         if not self.active:
+            self.stats.wall_s += time.time() - t0
             return False
-        seqs = [r.rid for r in self.active]
         # Append this step's token slot, then pack tables.
-        for r in self.active:
-            self.cache.append(r.rid, 1)
+        runnable = self._append_with_preemption()
+        if not runnable:
+            # An occasional all-stalled step is normal under pressure
+            # (capacity frees as others complete), but a *permanent* stall
+            # means some request can never grow — fail loudly rather than
+            # spinning run_until_drained to its step cap.
+            self._stalled_steps += 1
+            if self._stalled_steps > 64:
+                raise OutOfMemory(
+                    f"engine stalled {self._stalled_steps} consecutive "
+                    f"steps: active requests "
+                    f"{sorted(r.rid for r in self.active)} cannot grow "
+                    f"(pool too small or fragmentation unrecoverable)")
+            # Stalled steps still did real work (admission attempts, forced
+            # preemption gathers) — keep them in the tok/s denominator.
+            self.stats.wall_s += time.time() - t0
+            return bool(self.active or self.queue or self.preempted)
+        self._stalled_steps = 0
+        seqs = [r.rid for r in runnable]
         # Appends under pressure may compact; execute the copy plan before
         # the decode step consumes the updated tables (ordering matters:
         # tables are rewritten at plan time, payloads move here).
         self._run_compaction()
+        # touch() the pages this step's packed tables will read and
+        # batch-fault the missing ones in from the host tier.
+        self._fault_in(seqs)
         ctx = self._ctx_global(self.cache.pack_ctx(seqs, self.mpps))
-        toks = jnp.asarray([r.out[-1] for r in self.active], jnp.int32)
+        toks = jnp.asarray([r.out[-1] for r in runnable], jnp.int32)
         pos = jnp.asarray([self.cache.seq_tokens[r.rid] - 1
-                           for r in self.active], jnp.int32)
+                           for r in runnable], jnp.int32)
         state = self._stack_states(seqs)
         logits, self.pools, state = self._decode_jit(
             self.params, toks, pos, self.pools, ctx, state)
         self._unstack_states(seqs, state)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         done_now = []
-        for i, r in enumerate(self.active):
+        for i, r in enumerate(runnable):
             r.out.append(int(nxt[i]))
             self.stats.decode_tokens += 1
             if len(r.out) >= r.max_new \
@@ -204,6 +513,8 @@ class ServingEngine:
             self.active.remove(r)
             self.cache.free(r.rid)
             self.states.pop(r.rid, None)
+            self.host.drop_seq(r.rid)
+            self._saved_tokens.pop(r.rid, None)
         # Execute any CAC compaction plans on-device.
         self._run_compaction()
         st = self.cache.stats()
@@ -258,7 +569,8 @@ class ServingEngine:
 
     def run_until_drained(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.queue or self.active or self.preempted) \
+                and steps < max_steps:
             self.step()
             steps += 1
         return steps

@@ -1,0 +1,91 @@
+"""Host memory tier under the Mosaic pool: evicted/cold KV page payloads.
+
+The paper's demand-paging setting (§1) assumes the application's working
+set can exceed device memory: pages live in host DRAM and move over the
+system I/O bus at *base-page* granularity on first touch.  For the serving
+engine that means HBM holds only the KV pages active decode steps actually
+read; everything else — preempted requests, cold prefixes — parks here.
+
+Payloads are keyed by **logical** identity ``(seq, shard, vpn)``, not by
+physical page: eviction frees the physical page (another tenant reuses it
+immediately), and a resumed sequence is re-mapped to whatever frames CoCoA
+hands out — the fault-in path looks the payload up by who owns the page,
+scatters it to the page's *new* physical location, and drops the host copy
+(the device copy is authoritative once resident; decode appends write it).
+
+The device⇄host movement itself is the engine's job
+(:func:`repro.kernels.ops.page_gather` / ``page_scatter``); this class is
+pure host-side bookkeeping and therefore trivially testable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Key = Tuple[int, int, int]          # (seq, shard, local vpn)
+
+
+class HostPageStore:
+    """Host-DRAM store of KV base-page payloads.
+
+    Each entry is one base page of one sub-pool: a pair of numpy arrays
+    ``(k_page, v_page)`` shaped ``[L, page_tokens, kv_heads, head_dim]``
+    (whatever the model's pool page slice is — the store is shape-agnostic).
+    """
+
+    def __init__(self) -> None:
+        self._pages: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
+        self.stats = {
+            "swapped_out_pages": 0, "swapped_in_pages": 0,
+            "swap_out_requests": 0, "swap_in_requests": 0,
+            "peak_pages": 0,
+        }
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def has(self, seq: int, shard: int, vpn: int) -> bool:
+        return (seq, shard, vpn) in self._pages
+
+    def seq_pages(self, seq: int) -> List[Key]:
+        return sorted(k for k in self._pages if k[0] == seq)
+
+    def nbytes(self) -> int:
+        return sum(k.nbytes + v.nbytes for k, v in self._pages.values())
+
+    # ------------------------------------------------------------- movement
+
+    def put(self, seq: int, shard: int, vpn: int,
+            k_page: np.ndarray, v_page: np.ndarray) -> None:
+        """Park one evicted page's payload (device→host already gathered)."""
+        self._pages[(seq, shard, vpn)] = (np.asarray(k_page),
+                                          np.asarray(v_page))
+        self.stats["swapped_out_pages"] += 1
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       len(self._pages))
+
+    def pop(self, seq: int, shard: int, vpn: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Retrieve and drop one payload for fault-in (host→device)."""
+        kv = self._pages.pop((seq, shard, vpn))
+        self.stats["swapped_in_pages"] += 1
+        return kv
+
+    def note_swap_out(self) -> None:
+        """One whole-request preemption (for the bench's swap counts)."""
+        self.stats["swap_out_requests"] += 1
+
+    def note_swap_in(self) -> None:
+        """One whole-request resume."""
+        self.stats["swap_in_requests"] += 1
+
+    def drop_seq(self, seq: int) -> int:
+        """Discard a sequence's parked pages (request cancelled/finished)."""
+        keys = [k for k in self._pages if k[0] == seq]
+        for k in keys:
+            del self._pages[k]
+        return len(keys)

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 class ShardedKVCache:
     def __init__(self, geometry: PoolGeometry, pages_per_shard: int,
-                 n_shards: int, manager_kind: str = "mosaic"):
+                 n_shards: int, manager_kind: str = "mosaic", *,
+                 link=None, page_bytes: int = 0):
         from repro.core.pagepool import PoolConfig
         self.geo = geometry
         self.S = n_shards
@@ -46,7 +47,7 @@ class ShardedKVCache:
                 frame_pages=geometry.frame_pages,
                 page_tokens=geometry.page_tokens,
                 compact_threshold=geometry.compact_threshold,
-            )) for _ in range(n_shards)
+            ), link=link, page_bytes=page_bytes) for _ in range(n_shards)
         ]
         self.seq_tokens: Dict[int, int] = {}
 
@@ -91,6 +92,57 @@ class ShardedKVCache:
         for s, m in enumerate(self.mgrs):
             for op in m.drain_copy_ops():
                 out.append((s, op))
+        return out
+
+    # ------------------------------------------------------- host tier
+
+    def mapped_pages(self, seq: int) -> List[Tuple[int, int, int]]:
+        """All of ``seq``'s mapped pages as [(shard, local vpn, ppn)]."""
+        out = []
+        for s, m in enumerate(self.mgrs):
+            if seq not in m.tables:
+                continue
+            table = m.tables[seq]
+            for vpn in table.mapped_vpns():
+                out.append((s, vpn, table.ppn[vpn]))
+        return out
+
+    def evict_pages(self, pages: Sequence[Tuple[int, int, int]]) -> int:
+        """Account a device→host spill of [(shard, vpn, ppn)] pages."""
+        by_shard: Dict[int, List[int]] = {}
+        for s, _vpn, ppn in pages:
+            by_shard.setdefault(s, []).append(ppn)
+        return sum(self.mgrs[s].residency.evict(ppns)
+                   for s, ppns in by_shard.items())
+
+    def demote_host_backed(self, seq: int, host) -> int:
+        """After a resume re-allocation: pages whose payload sits in the
+        host store become non-resident so the next step faults them in."""
+        n = 0
+        for s, m in enumerate(self.mgrs):
+            if seq not in m.tables:
+                continue
+            table = m.tables[seq]
+            ppns = [table.ppn[vpn] for vpn in table.mapped_vpns()
+                    if host.has(seq, s, vpn)]
+            m.residency.demote(ppns)
+            n += len(ppns)
+        return n
+
+    def missing_pages(self, seqs: Sequence[int]
+                      ) -> Dict[int, List[Tuple[int, int, int]]]:
+        """touch(): per shard, the non-resident (ppn, owner, vpn) triples
+        among the pages the given sequences' packed tables will read."""
+        out: Dict[int, List[Tuple[int, int, int]]] = {}
+        for s, m in enumerate(self.mgrs):
+            ppns = []
+            for seq in seqs:
+                if seq in m.tables:
+                    table = m.tables[seq]
+                    ppns.extend(table.ppn[v] for v in table.mapped_vpns())
+            missing = m.residency.touch(ppns)
+            if missing:
+                out[s] = [(p, *m.rmap[p]) for p in missing]
         return out
 
     # ---------------------------------------------------------------- pack

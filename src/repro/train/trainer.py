@@ -24,7 +24,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro import compat
+from repro.compat import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -232,7 +233,7 @@ class Trainer:
                                 seed=seed)
 
         step_fn, init_fn = make_train_step(self.lm, hp, mesh)
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params, opt, ef = init_fn(jax.random.PRNGKey(seed))
             pspec, mspec = state_specs(params, hp, mesh)
             ospec = {"step": P(), "mu": mspec, "nu": mspec}
@@ -275,7 +276,7 @@ class Trainer:
         history = []
         pf = Prefetcher(self.data, start_step=self.start_step)
         try:
-            with jax.sharding.set_mesh(self.mesh):
+            with compat.set_mesh(self.mesh):
                 t0 = time.time()
                 for i in range(self.start_step, self.start_step + n_steps):
                     step, batch = next(pf)

@@ -116,6 +116,118 @@ def test_engine_tracks_coalescing_stats():
     assert eng.stats.coalesced_mean > 0.3
 
 
+# ----------------------------------------------------- host tier / paging
+
+
+def _oversub_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # Decode-heavy so the working set outgrows the pool mid-run.
+        T = int(rng.integers(24, 56))
+        reqs.append(Request(
+            rid=i, tenant=i % 3,
+            prompt=rng.integers(0, cfg.vocab_size, T).astype(np.int32),
+            max_new=int(rng.integers(24, 40))))
+    return reqs
+
+
+def test_engine_oversubscribed_completes_under_both_managers():
+    """A 2x oversubscribed multi-tenant run drains under both managers,
+    with identical greedy outputs and clean invariants."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2.5-3b")
+    results = {}
+    for kind in ("mosaic", "gpu-mmu"):
+        eng = ServingEngine(cfg, geometry=GEO, max_batch=6, max_seq=96,
+                            manager_kind=kind, seed=0, oversubscription=2.0)
+        reqs = _oversub_requests(cfg, 10)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained(max_steps=2000)
+        assert all(r.done for r in reqs)
+        eng.cache.check_invariants()
+        assert len(eng.host) == 0, "drained engine must not hold host pages"
+        results[kind] = {r.rid: list(r.out) for r in reqs}
+    assert results["mosaic"] == results["gpu-mmu"]
+
+
+def test_engine_preempted_request_resumes_token_identical():
+    """A preempted-then-resumed request must produce exactly the tokens of
+    an un-preempted run, and every swap cycle must leave the pool's
+    invariants intact."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2.5-3b")
+
+    def run(with_preempt):
+        eng = ServingEngine(cfg, geometry=GEO, max_batch=4, max_seq=96,
+                            manager_kind="mosaic", seed=0)
+        rng = np.random.default_rng(3)
+        spec = [(20, 24), (5, 30), (7, 30)]
+        reqs = [Request(rid=i, tenant=i,
+                        prompt=rng.integers(0, cfg.vocab_size, T)
+                        .astype(np.int32), max_new=mn)
+                for i, (T, mn) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        for step in range(60):
+            eng.step()
+            if with_preempt and step in (3, 9):
+                # Two full swap cycles: hold across a few steps so other
+                # requests decode (and may compact) in between.
+                assert eng.preempt(0, hold=True)
+                eng.cache.check_invariants()
+                for _ in range(2):
+                    eng.step()
+                    eng.cache.check_invariants()
+                assert eng.release(0)
+                eng.step()                    # resume + first fault-in
+                eng.cache.check_invariants()
+            if all(r.done for r in reqs):
+                break
+        eng.run_until_drained(max_steps=200)
+        assert all(r.done for r in reqs)
+        return eng, {r.rid: list(r.out) for r in reqs}
+
+    eng_plain, plain = run(with_preempt=False)
+    eng_swap, swapped = run(with_preempt=True)
+    assert eng_swap.stats.swaps_out >= 2 and eng_swap.stats.faults > 0
+    assert eng_plain.stats.swaps_out == 0
+    assert plain == swapped
+    eng_swap.cache.check_invariants()
+    assert len(eng_swap.host) == 0
+
+
+def test_engine_priority_preemption_under_admission_pressure():
+    """A high-priority arrival preempts the lowest-priority active request
+    instead of waiting, and everyone still finishes with correct state."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=3, max_seq=96,
+                        manager_kind="mosaic", seed=0, oversubscription=1.6)
+    rng = np.random.default_rng(4)
+    low = [Request(rid=i, tenant=0, priority=0,
+                   prompt=rng.integers(0, cfg.vocab_size, 64)
+                   .astype(np.int32), max_new=16) for i in range(3)]
+    for r in low:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    hi = Request(rid=99, tenant=1, priority=5,
+                 prompt=rng.integers(0, cfg.vocab_size, 64)
+                 .astype(np.int32), max_new=8)
+    eng.submit(hi)
+    for _ in range(4):
+        eng.step()
+        eng.cache.check_invariants()
+    assert hi in eng.active or hi.done, \
+        "high-priority request should displace a low-priority one"
+    assert eng.stats.swaps_out >= 1
+    eng.run_until_drained(max_steps=500)
+    assert all(r.done for r in low + [hi])
+    eng.cache.check_invariants()
+
+
 # ------------------------------------------------------------- kv cache
 
 
@@ -157,6 +269,8 @@ def test_sharded_cache_random_ops_property():
     """Hypothesis-style invariant sweep: arbitrary allocate/append/free
     interleavings keep every sub-pool's invariants and the striping
     contract (global frame f of a sequence lives in sub-pool f % S)."""
+    pytest.importorskip("hypothesis",
+                        reason="property tests need hypothesis")
     from hypothesis import given, settings, HealthCheck
     from hypothesis import strategies as st
 

@@ -15,6 +15,9 @@ invariants after every operation:
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -201,7 +201,7 @@ def test_compressed_allreduce_single_device_exact():
     """On a 1-device axis the compressed all-reduce must be exact identity
     (and error feedback zero): the wire path is skipped."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
     from repro.train.grad_compress import compressed_allreduce_flat
 
     mesh = jax.make_mesh((1,), ("data",))
