@@ -12,17 +12,86 @@ Suites:
   pagesize TPU-native page-size trade-off                 (paper §1)
   serving  Mosaic vs GPU-MMU on the serving engine        (Figs. 5/6 analogue)
   oversub  2x-oversubscribed host-tier paging + swap cycle (paper §1/§4.2)
+  overlap  sync vs async double-buffered fault-in + link contention (§7)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
-Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary.
+Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
+plus a machine-readable ``BENCH_serving.json`` artifact (suite/config →
+tok/s, exposed_us, hidden_us, dma_count) so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+
+def _json_safe(v):
+    """numpy scalars / bools → plain JSON types."""
+    import numpy as np
+    if isinstance(v, (bool, np.bool_)):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    return v
+
+
+def write_bench_artifact(results, path="BENCH_serving.json"):
+    """suite/config → {tok_per_s, exposed_us, hidden_us, dma_count, ...}.
+
+    Every serving-side row (anything reporting a tok/s) gets an entry
+    keyed ``<suite>/<bench>/<manager-or-mode>[@factor]``; claim rows are
+    collected verbatim so CI can diff trajectories across PRs.
+    """
+    suites = {}
+    claims = {}
+    for suite, rows in results.items():
+        for r in rows:
+            cfg = r.get("manager", r.get("mode", ""))
+            if "tok_per_s_cpu" in r:
+                label = f"{suite}/{r.get('bench', suite)}/{cfg}"
+                if "factor" in r:
+                    label += f"@{r['factor']}"
+                suites[label] = {
+                    "tok_per_s": _json_safe(r["tok_per_s_cpu"]),
+                    "exposed_us": _json_safe(r.get("exposed_us", 0.0)),
+                    "hidden_us": _json_safe(r.get("hidden_us", 0.0)),
+                    "dma_count": _json_safe(
+                        r.get("dma_count", r.get("fault_dmas", 0))),
+                    "faults": _json_safe(r.get("faults", 0)),
+                    "transfer_us": _json_safe(r.get("transfer_us", 0.0)),
+                }
+            for k, v in r.items():
+                if k.startswith("claim_") or k.startswith("hidden_fraction"):
+                    label = f"{suite}/{k}"
+                    if "factor" in r:       # keep per-factor datapoints
+                        label += f"@{r['factor']}"
+                    claims[label] = _json_safe(v)
+    if not suites:
+        # A figure-only run has no serving rows; don't clobber a
+        # previously-written trajectory artifact with an empty one.
+        return
+    # Merge with an existing artifact so partial --only runs refresh
+    # their own entries without deleting other suites' datapoints.
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            suites = {**prev.get("suites", {}), **suites}
+            claims = {**prev.get("claims", {}), **claims}
+        except (json.JSONDecodeError, OSError):
+            pass                        # corrupt artifact: rewrite fresh
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "suites": suites, "claims": claims}, f,
+                  indent=2, sort_keys=True)
+    print(f"\nwrote {path} ({len(suites)} configs, {len(claims)} claims)",
+          flush=True)
 
 
 def _emit(rows):
@@ -54,19 +123,32 @@ def main(argv=None):
         "serving": serving_bench.serving_compare,
         "oversub": lambda: (serving_bench.oversubscribed_compare()
                             + serving_bench.swap_cycle_compare()),
+        "overlap": lambda: (serving_bench.overlap_compare(
+                                factors=(2.0,) if args.fast else (1.5, 2.0),
+                                n_requests=8 if args.fast else 12)
+                            + serving_bench.overlap_link_contention(
+                                n_access=n // 2)),
     }
     picked = (args.only.split(",") if args.only else list(suites))
+    unknown = [p for p in picked if p not in suites and p != "roofline"]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from "
+                 f"{sorted(suites) + ['roofline']}")
 
     claims = []
-    for name in picked:
+    results = {}
+    for name in [p for p in picked if p in suites]:
         t0 = time.time()
         print(f"=== {name}", flush=True)
         rows = _emit(suites[name]())
+        results[name] = rows
         for r in rows:
             for k, v in r.items():
                 if k.startswith("claim_"):
                     claims.append((name, k, bool(v)))
         print(f"  ({time.time() - t0:.1f}s)", flush=True)
+
+    write_bench_artifact(results)
 
     if os.path.exists("dryrun_all.jsonl") and (args.only is None
                                                or "roofline" in picked):

@@ -29,12 +29,13 @@ from repro.serving.engine import Request, ServingEngine
 
 
 def run(manager_kind: str, n_requests: int, seed: int,
-        oversubscribe: float = 1.0):
+        oversubscribe: float = 1.0, fault_mode: str = "async"):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
     eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
                         manager_kind=manager_kind, seed=seed,
-                        oversubscription=oversubscribe)
+                        oversubscription=oversubscribe,
+                        fault_mode=fault_mode)
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
@@ -60,12 +61,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--oversubscribe", type=float, default=1.0,
                     help="pool = sized-for-peak working set / this factor")
+    ap.add_argument("--fault-mode", choices=("async", "sync"),
+                    default="async",
+                    help="async = double-buffered prefetch pipeline "
+                         "(DESIGN.md §7); sync = PR 1's blocking fault-in")
     args = ap.parse_args()
 
     results = {}
     for kind in ("mosaic", "gpu-mmu"):
         eng, reqs, steps = run(kind, args.requests, args.seed,
-                               args.oversubscribe)
+                               args.oversubscribe, args.fault_mode)
         st = eng.cache.stats()
         s = eng.stats
         line = (f"[{kind:8}] {steps} engine steps | "
@@ -77,8 +82,11 @@ def main():
             line += (f" | swaps {s.swaps_out}/{s.swaps_in} | "
                      f"faults {s.faults} in {s.fault_dmas} DMAs | "
                      f"{s.bytes_in / 1024:.0f} KiB in | "
-                     f"{s.transfer_us:.0f} us bus")
+                     f"{s.transfer_us:.0f} us bus "
+                     f"({s.fault_hidden_us:.0f} hidden / "
+                     f"{s.fault_exposed_us:.0f} exposed)")
         print(line)
+        print(f"           {s.summary()}")
         results[kind] = {r.rid: tuple(r.out) for r in reqs}
 
     same = results["mosaic"] == results["gpu-mmu"]

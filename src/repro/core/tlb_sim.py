@@ -76,6 +76,11 @@ class SimConfig:
     # fault-to-compute ratio of the full-length run (disclosed; swept in the
     # Fig. 7 benchmark with K=1 as the worst case).
     fault_amortize: int = 16
+    # Host↔device DMA channels on the shared link (serving/dma.py's overlap
+    # model, transplanted): 1 = the paper's single serialized bus; >1 lets
+    # transfers of different apps proceed concurrently, shrinking the
+    # cross-app interference the contention stats measure.
+    dma_channels: int = 1
     clock_ghz: float = 1.02          # shader clock (Table 1: 1020 MHz)
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     # Page-size mode: "mosaic" uses per-frame coalesced bits from the
@@ -160,25 +165,45 @@ class Link:
     DMA setup overlaps with in-flight transfers (real PCIe queues many
     descriptors), so the bus *occupancy* per fault is bytes/bandwidth, while
     the faulting warp's *latency* additionally pays the setup cost.
+
+    ``cfg.dma_channels`` transplants the serving engine's overlap model
+    (:mod:`repro.serving.dma`): each transfer rides the earliest-free
+    channel, so with one channel the bus serializes exactly as in the
+    paper, while extra channels let different apps' faults overlap.  The
+    queueing delay a fault pays because the shared link is busy — almost
+    always with *another* app's transfer in a multi-app run — is tracked
+    per app in ``contention_cycles``.
     """
 
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig, n_apps: int = 1):
         self.cfg = cfg
-        self.busy_until = 0.0
+        self.channel_busy = [0.0] * max(1, cfg.dma_channels)
         self.faults = 0
         self.fault_cycles_total = 0.0
+        self.contention_cycles = [0.0] * n_apps
 
-    def fault(self, now: float) -> float:
+    @property
+    def busy_until(self) -> float:
+        return max(self.channel_busy)
+
+    def fault(self, now: float, app: int = 0) -> float:
         c = self.cfg
         k = max(1, c.fault_amortize)
         transfer = (c.page_bytes / (c.link.bandwidth_GBps * 1e9)) * c.clock_ghz * 1e9 / k
         setup = c.link.setup_us * c.clock_ghz * 1e3 / k
-        begin = max(now, self.busy_until)
-        self.busy_until = begin + transfer          # bus occupancy
+        ch = min(range(len(self.channel_busy)),
+                 key=lambda i: self.channel_busy[i])
+        begin = max(now, self.channel_busy[ch])
+        self.channel_busy[ch] = begin + transfer    # channel occupancy
         fin = begin + setup + transfer              # faulting warp's latency
         self.faults += 1
         self.fault_cycles_total += fin - now
+        if app < len(self.contention_cycles):
+            self.contention_cycles[app] += begin - now
         return fin
+
+    def contention_total(self) -> float:
+        return float(sum(self.contention_cycles))
 
 
 # --------------------------------------------------------------------------- traces
@@ -234,7 +259,7 @@ class TranslationSim:
         self.l2_base = LRU(cfg.l2_base_entries)
         self.l2_large = LRU(cfg.l2_large_entries)
         self.walker = Walker(cfg.walker_slots, cfg.walk_latency)
-        self.link = Link(cfg)
+        self.link = Link(cfg, n_apps=n)
         self.resident: List[set] = [set() for _ in range(n)]
         self.mshr: Dict[Tuple[int, int, bool], float] = {}
 
@@ -280,7 +305,7 @@ class TranslationSim:
             ppn = int(tr.ppn[i])
             if ppn not in self.resident[app]:
                 self.resident[app].add(ppn)
-                done = max(done, self.link.fault(now))
+                done = max(done, self.link.fault(now, app))
         return done
 
     # -- main loop -----------------------------------------------------------------

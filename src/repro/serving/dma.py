@@ -1,0 +1,289 @@
+"""Async double-buffered fault-in: hide host→device DMA behind decode.
+
+PR 1's demand paging is synchronous: the whole batch stalls on the full
+gather-transfer before decode runs, so every host-tier fault is exposed
+latency.  Mosaic's en-masse, contiguity-preserving allocation makes page
+touches *predictable* — the pages step N+1 will read are knowable at step
+N — so (GPUVM-style) the transfer can run on a DMA channel *while* step N
+decodes, and only the remainder is exposed.
+
+Three cooperating pieces (DESIGN.md §7):
+
+* :class:`AsyncDMAEngine` — models ``n_channels`` DMA channels on the
+  host↔device link with an explicit microsecond timeline.  An enqueued
+  job gets a start timestamp (``max(now, channel_free)``) and a
+  completion timestamp (``start + transfer_us`` from the shared
+  :class:`~repro.core.demand_paging.LinkModel` / contiguous-run cost
+  model).  Per-job transfer time is split into *hidden* µs (overlapped
+  with compute: the job completed before anyone waited on it, or the
+  waited-on portion that had already elapsed) and *exposed* µs (the
+  portion the engine stalled on); ``hidden + exposed == transfer_us``
+  for every job, and channel-queueing delay beyond the transfer itself
+  is tracked separately as ``queue_us``.
+* :class:`StagingBuffer` — the double-buffered staging region completed
+  prefetches scatter into.  Ownership rule: the DMA engine's completions
+  land only in the *back* buffer; the engine's fault-in path reads only
+  the *front* buffer; :meth:`StagingBuffer.swap` (called once at step
+  start, before admission) publishes back→front.  Unconsumed front
+  entries are retained across swaps — the host copy stays authoritative
+  until a payload is actually scattered into a mapped pool page, so a
+  retained (or even dropped) staged page is never a correctness hazard,
+  only accounted waste.
+* :class:`Prefetcher` — predicts step N+1's page touches at step N: the
+  host-backed pages among each active request's mapped set (its next
+  token-slot page included) plus the pages of the next preempted
+  requests eligible for resume, in the same priority-then-FIFO order
+  the engine's admission loop uses.  Predicted pages are issued to the
+  DMA engine right before the decode call and drain into staging while
+  decode runs.
+
+Payloads are staged as *copies* keyed by logical identity
+``(seq, shard, vpn)`` (same keying as the
+:class:`~repro.serving.host_tier.HostPageStore`), so compaction moving a
+page's physical location never invalidates a staged entry, and a wrong
+prediction loses nothing: the host copy is only popped at consumption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.demand_paging import FaultBatch, LinkModel
+
+Key = Tuple[int, int, int]          # (seq, shard, local vpn)
+
+
+@dataclasses.dataclass
+class DMAJob:
+    """One enqueued gather-transfer on a DMA channel.
+
+    ``ppns`` feed the contiguous-run cost model: real physical pages for
+    demand faults (device-side scatter targets), synthetic contiguous
+    staging slots for resume prefetches (the staging region is a
+    contiguous device buffer, so a host→staging gather always merges).
+    """
+
+    job_id: int
+    keys: List[Key]
+    batch: FaultBatch
+    start_us: float
+    done_us: float
+    payloads: List[Tuple[np.ndarray, np.ndarray]]
+    kind: str = "prefetch"          # "prefetch" | "demand"
+    channel: int = -1
+    settled: bool = False           # hidden/exposed already accounted
+
+    @property
+    def transfer_us(self) -> float:
+        return self.batch.transfer_us
+
+    @property
+    def dma_count(self) -> int:
+        return self.batch.dma_count
+
+    @property
+    def nbytes(self) -> int:
+        return self.batch.nbytes
+
+
+class AsyncDMAEngine:
+    """N-channel host→device DMA timeline with hidden/exposed accounting.
+
+    The clock is *modeled* microseconds supplied by the caller (the
+    engine advances it by measured decode wall time and by exposed
+    stalls), so the engine, the benches and the tests all reason on one
+    explicit timeline.
+    """
+
+    def __init__(self, link: Optional[LinkModel] = None,
+                 n_channels: int = 2):
+        assert n_channels >= 1
+        self.link = link or LinkModel()
+        self.channel_free = [0.0] * n_channels
+        self._ids = itertools.count()
+        self.in_flight: Dict[int, DMAJob] = {}
+        self.stats = {
+            "jobs": 0, "prefetch_jobs": 0, "demand_jobs": 0,
+            "pages": 0, "dma_count": 0, "bytes": 0,
+            "transfer_us": 0.0,     # Σ per-job transfer_us (hidden+exposed)
+            "hidden_us": 0.0,       # overlapped with compute
+            "exposed_us": 0.0,      # stalled-on portion of transfers
+            "queue_us": 0.0,        # stalled waiting for a busy channel
+        }
+
+    # ------------------------------------------------------------- enqueue
+
+    def enqueue(self, keys: Sequence[Key], ppns: Sequence[int],
+                page_bytes: int,
+                payloads: Sequence[Tuple[np.ndarray, np.ndarray]],
+                now_us: float, kind: str = "prefetch") -> DMAJob:
+        """Queue one gather-transfer; returns the job with its timeline."""
+        assert len(keys) == len(ppns) == len(payloads)
+        batch = FaultBatch([int(p) for p in ppns], page_bytes, self.link)
+        ch = min(range(len(self.channel_free)),
+                 key=lambda c: self.channel_free[c])
+        start = max(float(now_us), self.channel_free[ch])
+        done = start + batch.transfer_us
+        self.channel_free[ch] = done
+        job = DMAJob(job_id=next(self._ids), keys=list(keys), batch=batch,
+                     start_us=start, done_us=done, payloads=list(payloads),
+                     kind=kind, channel=ch)
+        self.in_flight[job.job_id] = job
+        self.stats["jobs"] += 1
+        self.stats[f"{kind}_jobs"] += 1
+        self.stats["pages"] += len(job.keys)
+        self.stats["dma_count"] += job.dma_count
+        self.stats["bytes"] += job.nbytes
+        self.stats["transfer_us"] += job.transfer_us
+        return job
+
+    # ------------------------------------------------------------- settle
+
+    def wait(self, job: DMAJob, now_us: float) -> float:
+        """Stall until ``job`` completes; returns the advanced clock.
+
+        The stall splits into the *exposed* part of the transfer itself
+        (at most ``transfer_us``) and channel-*queueing* delay (the job
+        had not even started because the channel was busy); the
+        remainder of the transfer was *hidden* behind compute that
+        already ran.
+        """
+        stall = max(0.0, job.done_us - now_us)
+        if not job.settled:
+            exposed = min(stall, job.transfer_us)
+            self.stats["exposed_us"] += exposed
+            self.stats["hidden_us"] += job.transfer_us - exposed
+            self.stats["queue_us"] += stall - exposed
+            job.settled = True
+        self.in_flight.pop(job.job_id, None)
+        return max(float(now_us), job.done_us)
+
+    def drain(self, now_us: float) -> List[DMAJob]:
+        """Harvest jobs whose completion timestamp has passed.
+
+        A drained job completed strictly in the background, so its whole
+        transfer was hidden behind compute.
+        """
+        done = [j for j in self.in_flight.values()
+                if j.done_us <= float(now_us)]
+        for j in done:
+            if not j.settled:
+                self.stats["hidden_us"] += j.transfer_us
+                j.settled = True
+            del self.in_flight[j.job_id]
+        return sorted(done, key=lambda j: (j.done_us, j.job_id))
+
+    # ------------------------------------------------------------- queries
+
+    def busy_until(self) -> float:
+        return max(self.channel_free)
+
+
+class StagingBuffer:
+    """Double-buffered staging region for completed prefetch payloads.
+
+    Ownership rules (DESIGN.md §7): DMA completions are staged into the
+    *back* buffer only; the engine's fault-in path consumes from the
+    *front* buffer only; ``swap()`` runs once per step, before admission,
+    publishing back→front.  Unconsumed front entries are retained (the
+    payload was already transferred; the host copy stays authoritative
+    until consumption), and invalidation simply drops entries — safe
+    because staged payloads are copies.
+    """
+
+    def __init__(self) -> None:
+        self._front: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
+        self._back: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
+        self.stats = {"staged": 0, "consumed": 0, "invalidated": 0,
+                      "peak_front": 0}
+
+    def __len__(self) -> int:
+        return len(self._front) + len(self._back)
+
+    def stage(self, key: Key,
+              payload: Tuple[np.ndarray, np.ndarray]) -> None:
+        self._back[key] = payload
+        self.stats["staged"] += 1
+
+    def swap(self) -> None:
+        self._front.update(self._back)
+        self._back = {}
+        self.stats["peak_front"] = max(self.stats["peak_front"],
+                                       len(self._front))
+
+    def has(self, key: Key) -> bool:
+        return key in self._front
+
+    def contains(self, key: Key) -> bool:
+        """In either buffer (prefetch dedup: staged ⇒ don't re-issue)."""
+        return key in self._front or key in self._back
+
+    def consume(self, key: Key
+                ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        payload = self._front.pop(key, None)
+        if payload is not None:
+            self.stats["consumed"] += 1
+        return payload
+
+    def invalidate_seq(self, seq: int) -> int:
+        """Drop a sequence's staged pages (request completed/cancelled)."""
+        n = 0
+        for buf in (self._front, self._back):
+            for k in [k for k in buf if k[0] == seq]:
+                del buf[k]
+                n += 1
+        self.stats["invalidated"] += n
+        return n
+
+
+class Prefetcher:
+    """Predicts step N+1's host-backed page touches and tracks issues.
+
+    ``depth`` bounds how many preemption victims ahead of the resume
+    queue are prefetched per step (the engine may resume several in one
+    admission round when capacity frees en masse).
+    """
+
+    def __init__(self, depth: int = 2):
+        self.depth = depth
+        self.in_flight: Dict[Key, DMAJob] = {}
+        self.stats = {"issued_pages": 0, "hits": 0, "misses": 0,
+                      "wasted_pages": 0}
+
+    # ------------------------------------------------------------- predict
+
+    def predict(self, cache, host, active_seqs: Sequence[int],
+                resume_order: Sequence[int]
+                ) -> List[Tuple[Key, Optional[int]]]:
+        """[(key, ppn-or-None)] the next step will touch but is not
+        HBM-resident.
+
+        * Active requests: the non-resident subset of their mapped pages
+          (the packed tables of step N+1 read all of them; this includes
+          the next token-slot page).  These have physical targets, so
+          their ``ppn`` rides along for contiguity costing.
+        * The next ``depth`` preempted requests in resume order: every
+          host-parked page (no physical target yet — the resume will
+          re-map them; transfers land in staging).
+        """
+        out: List[Tuple[Key, Optional[int]]] = []
+        for seq, s, vpn, ppn in cache.host_backed_pages(active_seqs, host):
+            out.append(((seq, s, vpn), ppn))
+        for rid in list(resume_order)[:self.depth]:
+            for key in host.seq_pages(rid):
+                out.append((key, None))
+        return out
+
+    # ------------------------------------------------------------- issue
+
+    def cancel_seq(self, seq: int) -> None:
+        for k in [k for k in self.in_flight if k[0] == seq]:
+            del self.in_flight[k]
+
+    def forget(self, keys: Iterable[Key]) -> None:
+        for k in keys:
+            self.in_flight.pop(k, None)

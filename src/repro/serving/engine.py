@@ -16,10 +16,22 @@ packed tables will read and batch-faults the missing ones in from the
 :class:`~repro.serving.host_tier.HostPageStore` as one gather-transfer
 (contiguous runs merge into single DMAs — Mosaic's contiguity pays on the
 I/O bus too).  When an allocation hits ``OutOfMemory`` even after CAC
-compaction, the engine preempts the lowest-priority active request —
+compaction, the engine preempts the cheapest-to-evict active request
+(cost-aware score: resident pages × priority × remaining tokens) —
 evicting its frames to the host store at base-page granularity — instead
 of failing, and resumes it later via demand fault-in; a resumed request
 produces exactly the tokens it would have produced unpreempted.
+
+Async fault-in (DESIGN.md §7): with ``fault_mode="async"`` (the default)
+each step runs a two-stage pipeline — drain the prefetches that completed
+during the previous decode into the double-buffered staging region, fault
+only the remaining misses synchronously (*exposed* µs), then issue the
+predicted next-step touches to the :class:`~repro.serving.dma.
+AsyncDMAEngine` so their transfers run on DMA channels *while* this
+step's decode computes (*hidden* µs).  ``fault_mode="sync"`` keeps PR 1's
+blocking path; both modes produce byte-identical tokens because the
+prefetch machinery never alters allocation or scheduling, only when
+transfers are modeled to happen.
 
 The engine is deliberately host-driven: page tables are packed on host per
 step (Mosaic's runtime half), while the device step (prefill/decode +
@@ -42,6 +54,7 @@ from repro.core.cocoa import OutOfMemory
 from repro.core.demand_paging import LinkModel
 from repro.kernels import ops as kops
 from repro.models.lm import LM
+from repro.serving.dma import AsyncDMAEngine, Prefetcher, StagingBuffer
 from repro.serving.host_tier import HostPageStore
 from repro.serving.kv_cache import ShardedKVCache
 
@@ -75,6 +88,12 @@ class EngineStats:
     transfer_us: float = 0.0
     swaps_out: int = 0           # whole-request preemptions
     swaps_in: int = 0            # whole-request resumes
+    # Async fault-in pipeline (DESIGN.md §7).
+    fault_exposed_us: float = 0.0   # transfer µs the engine stalled on
+    fault_hidden_us: float = 0.0    # transfer µs overlapped with decode
+    prefetch_hits: int = 0          # faults served from staging/in-flight
+    prefetch_misses: int = 0        # demand faults the prefetcher missed
+    prefetch_wasted: int = 0        # prefetched pages never consumed
 
     @property
     def coalesced_mean(self) -> float:
@@ -85,8 +104,22 @@ class EngineStats:
         return self.occupancy_sum / max(self.decode_steps, 1)
 
     def tok_per_s(self) -> float:
-        return (self.prefill_tokens + self.decode_tokens) / max(
-            self.wall_s, 1e-9)
+        # A zero-step engine (or mocked clock) must report 0, not explode.
+        if self.wall_s <= 0.0:
+            return 0.0
+        return (self.prefill_tokens + self.decode_tokens) / self.wall_s
+
+    def summary(self) -> str:
+        """One-line human summary, incl. the exposed/hidden fault split."""
+        return (
+            f"{self.tok_per_s():.1f} tok/s | "
+            f"{self.prefill_tokens} prefill + {self.decode_tokens} decode "
+            f"tok in {self.decode_steps} steps | "
+            f"faults {self.faults} in {self.fault_dmas} DMAs "
+            f"({self.bytes_in / 1024:.0f} KiB, "
+            f"{self.fault_hidden_us:.0f}us hidden / "
+            f"{self.fault_exposed_us:.0f}us exposed) | "
+            f"swaps {self.swaps_out}/{self.swaps_in}")
 
 
 class ServingEngine:
@@ -94,8 +127,21 @@ class ServingEngine:
                  max_batch: int, max_seq: int, manager_kind: str = "mosaic",
                  n_shards: int = 1, params=None, seed: int = 0,
                  use_pallas: bool = False, oversubscription: float = 1.0,
-                 link: Optional[LinkModel] = None):
+                 link: Optional[LinkModel] = None,
+                 fault_mode: str = "async", dma_channels: int = 2,
+                 prefetch_depth: int = 2, victim_policy: str = "cost",
+                 decode_window_us: Optional[float] = None):
+        assert fault_mode in ("async", "sync"), fault_mode
+        assert victim_policy in ("cost", "priority"), victim_policy
         self.cfg = cfg
+        self.fault_mode = fault_mode
+        self.victim_policy = victim_policy
+        # Modeled compute window per decode step for the DMA timeline.
+        # None = measured decode wall time; on CPU that includes jit
+        # compilation (seconds), which dwarfs the µs-scale transfers —
+        # set an explicit window to model a real accelerator's step time
+        # and exercise partial overlap deterministically.
+        self.decode_window_us = decode_window_us
         self.lm = LM(cfg)
         self.geo = geometry
         self.max_batch = max_batch
@@ -141,6 +187,14 @@ class ServingEngine:
         self.active: List[Request] = []
         self._stalled_steps = 0      # consecutive no-decode steps
         self.stats = EngineStats()
+        # Async fault-in pipeline (DESIGN.md §7): DMA channel timeline +
+        # double-buffered staging + next-step touch predictor.  The clock
+        # is modeled µs: advanced by measured decode wall time (compute
+        # the transfers hide behind) and by exposed fault stalls.
+        self.dma = AsyncDMAEngine(self.link, n_channels=dma_channels)
+        self.staging = StagingBuffer()
+        self.prefetch = Prefetcher(depth=prefetch_depth)
+        self._clock_us = 0.0
         self._decode_jit = jax.jit(
             lambda p, t, pos, pools, ctx, st: self.lm.decode_step(
                 p, t, pos, pools, ctx, st))
@@ -196,15 +250,33 @@ class ServingEngine:
 
     # --------------------------------------------------- preemption / resume
 
+    def _victim_score(self, r: Request) -> float:
+        """Cost of evicting ``r``: resident pages (gather + fault-back
+        traffic) × priority (importance) × remaining tokens (how long it
+        still needs its memory — a nearly-done request vacates cheaply
+        and re-finishes quickly).  Lower = better victim."""
+        remaining = max(r.max_new - len(r.out), 1)
+        return (float(self.cache.resident_page_count(r.rid))
+                * (r.priority + 1) * remaining)
+
     def _pick_victim(self, *, below_priority: Optional[int] = None,
                      exclude: Tuple[int, ...] = ()) -> Optional[Request]:
-        """Lowest-priority active request (ties → youngest = highest rid)."""
+        """Cheapest-to-evict active request under the configured policy.
+
+        ``victim_policy="cost"`` (default) minimizes the eviction score;
+        ``"priority"`` keeps PR 1's lowest-priority-only rule.  Both
+        respect ``below_priority`` (a candidate never displaces its own
+        tier or above at admission) and tie-break youngest-first.
+        """
         cands = [r for r in self.active if r.rid not in exclude]
         if below_priority is not None:
             cands = [r for r in cands if r.priority < below_priority]
         if not cands:
             return None
-        return min(cands, key=lambda r: (r.priority, -r.rid))
+        if self.victim_policy == "priority":
+            return min(cands, key=lambda r: (r.priority, -r.rid))
+        return min(cands,
+                   key=lambda r: (self._victim_score(r), r.priority, -r.rid))
 
     def _alloc_with_preemption(self, req: Request, n_tokens: int, *,
                                below_priority: Optional[int],
@@ -342,24 +414,17 @@ class ServingEngine:
     # --------------------------------------------------- demand fault-in
 
     def _fault_in(self, seqs: List[int]) -> None:
-        """touch() this step's pages; batch-fault the missing ones in."""
-        missing = self.cache.missing_pages(seqs)
-        if not missing:
-            return
-        pps = self.cache.pages_per_shard
-        gidx: List[int] = []
-        payloads: List[Tuple[np.ndarray, np.ndarray]] = []
-        for s, entries in missing.items():
-            batch = self.cache.mgrs[s].residency.fault_in(
-                [ppn for ppn, _o, _v in entries])
-            self.stats.faults += len(batch.ppns)
-            self.stats.fault_dmas += batch.dma_count
-            self.stats.bytes_in += batch.nbytes
-            self.stats.transfer_us += batch.transfer_us
-            for ppn, owner, vpn in entries:
-                gidx.append(s * pps + ppn)
-                payloads.append(self.host.pop(owner, s, vpn))
-        self.stats.fault_steps += 1
+        """touch() this step's pages; fault the missing ones in (blocking
+        under ``fault_mode="sync"``, staged/overlapped under ``"async"``)."""
+        if self.fault_mode == "sync":
+            self._fault_in_sync(seqs)
+        else:
+            self._fault_in_async(seqs)
+
+    def _scatter_pages(self, gidx: List[int],
+                       payloads: List[Tuple[np.ndarray, np.ndarray]]
+                       ) -> None:
+        """Land faulted payloads in the device pools (one batched launch)."""
         if self.pools is None or not gidx:
             return
         idx = jnp.asarray(gidx, jnp.int32)
@@ -371,6 +436,175 @@ class ServingEngine:
         v = jax.vmap(lambda pool, pages: kops.page_scatter(
             pool, idx, pages, use_pallas=self.use_pallas))(v, vp)
         self.pools = (k, v)
+
+    def _fault_in_sync(self, seqs: List[int]) -> None:
+        """PR 1's blocking path: the whole batch stalls on the transfer,
+        so every µs is exposed."""
+        missing = self.cache.missing_pages(seqs)
+        if not missing:
+            return
+        pps = self.cache.pages_per_shard
+        gidx: List[int] = []
+        payloads: List[Tuple[np.ndarray, np.ndarray]] = []
+        step_us = 0.0
+        for s, entries in missing.items():
+            batch = self.cache.mgrs[s].residency.fault_in(
+                [ppn for ppn, _o, _v in entries])
+            self.stats.faults += len(batch.ppns)
+            self.stats.fault_dmas += batch.dma_count
+            self.stats.bytes_in += batch.nbytes
+            self.stats.transfer_us += batch.transfer_us
+            self.stats.fault_exposed_us += batch.transfer_us
+            step_us += batch.transfer_us
+            for ppn, owner, vpn in entries:
+                gidx.append(s * pps + ppn)
+                payloads.append(self.host.pop(owner, s, vpn))
+        self.stats.fault_steps += 1
+        self._clock_us += step_us       # the whole transfer stalls the step
+        self._scatter_pages(gidx, payloads)
+
+    def _fault_in_async(self, seqs: List[int]) -> None:
+        """Stage 1 of the pipeline: serve this step's misses from the
+        staging region (hidden), stall on in-flight prefetches (partially
+        hidden), and demand-fault only the never-predicted remainder
+        (fully exposed, and queued behind in-flight prefetch DMAs —
+        shared-channel contention is part of the model)."""
+        missing = self.cache.missing_pages(seqs)
+        if not missing:
+            return
+        pps = self.cache.pages_per_shard
+        now = self._clock_us
+        gidx: List[int] = []
+        payloads: List[Tuple[np.ndarray, np.ndarray]] = []
+        waited: Dict[Tuple[int, int, int],
+                     Tuple[np.ndarray, np.ndarray]] = {}
+        for s, entries in sorted(missing.items()):
+            demand: List[Tuple[int, int, int]] = []
+            for ppn, owner, vpn in entries:
+                key = (owner, s, vpn)
+                payload = waited.pop(key, None)
+                if payload is None:
+                    payload = self.staging.consume(key)
+                if payload is None and key in self.prefetch.in_flight:
+                    # Partially-hidden: the transfer started during the
+                    # previous decode; stall only for the remainder.
+                    job = self.prefetch.in_flight[key]
+                    now = self.dma.wait(job, now)
+                    self.prefetch.forget(job.keys)
+                    for k2, p2 in zip(job.keys, job.payloads):
+                        waited[k2] = p2
+                    payload = waited.pop(key)
+                if payload is None:
+                    demand.append((ppn, owner, vpn))
+                    continue
+                # Prefetch hit: payload already on device (staging);
+                # scatter it to its mapped frame and retire the host copy.
+                self.cache.mgrs[s].residency.mark_resident([ppn])
+                self.host.pop(owner, s, vpn)
+                self.stats.faults += 1
+                self.stats.prefetch_hits += 1
+                self.prefetch.stats["hits"] += 1
+                gidx.append(s * pps + ppn)
+                payloads.append(payload)
+            if demand:
+                batch = self.cache.mgrs[s].residency.fault_in(
+                    [ppn for ppn, _o, _v in demand])
+                dpay = [self.host.pop(owner, s, vpn)
+                        for _ppn, owner, vpn in demand]
+                job = self.dma.enqueue(
+                    [(owner, s, vpn) for _p, owner, vpn in demand],
+                    [ppn for ppn, _o, _v in demand],
+                    self.cache.mgrs[s].residency.page_bytes, dpay,
+                    now, kind="demand")
+                now = self.dma.wait(job, now)
+                self.stats.faults += len(demand)
+                self.stats.fault_dmas += job.dma_count
+                self.stats.bytes_in += job.nbytes
+                self.stats.transfer_us += job.transfer_us
+                self.stats.prefetch_misses += len(demand)
+                self.prefetch.stats["misses"] += len(demand)
+                for (ppn, _o, _v), p in zip(demand, dpay):
+                    gidx.append(s * pps + ppn)
+                    payloads.append(p)
+        # Leftover payloads of a waited multi-page job: keep for later
+        # steps (their keys weren't in this step's touch set); a key
+        # whose owner retired mid-flight is wasted transfer.
+        for key, payload in waited.items():
+            if self.host.has(*key):
+                self.staging.stage(key, payload)
+            else:
+                self.prefetch.stats["wasted_pages"] += 1
+                self.stats.prefetch_wasted += 1
+        self.stats.fault_steps += 1
+        # Engine-level exposed = the step's stall (includes channel-queue
+        # wait); the DMA engine keeps the strict per-transfer split.
+        self.stats.fault_exposed_us += now - self._clock_us
+        self.stats.fault_hidden_us = self.dma.stats["hidden_us"]
+        self._clock_us = now
+        self._scatter_pages(gidx, payloads)
+
+    # --------------------------------------------- async prefetch pipeline
+
+    def _drain_prefetches(self) -> None:
+        """Step start: publish the transfers that completed during the
+        previous decode into the staging front buffer (double-buffer
+        swap; see StagingBuffer ownership rules)."""
+        for job in self.dma.drain(self._clock_us):
+            self.prefetch.forget(job.keys)
+            for key, payload in zip(job.keys, job.payloads):
+                if self.host.has(*key):
+                    self.staging.stage(key, payload)
+                else:           # owner retired while the DMA was in flight
+                    self.prefetch.stats["wasted_pages"] += 1
+                    self.stats.prefetch_wasted += 1
+        self.staging.swap()
+        self.stats.fault_hidden_us = self.dma.stats["hidden_us"]
+
+    def _resume_order(self) -> List[int]:
+        """Resume candidates in the order _admit will consider them:
+        highest priority first, FIFO within a tier (stable sort)."""
+        return [r.rid for r in
+                sorted(self.preempted, key=lambda r: -r.priority)]
+
+    def _issue_prefetch(self) -> None:
+        """Step end (just before decode): issue the predicted next-step
+        touches to the DMA channels so they transfer while we compute."""
+        preds = self.prefetch.predict(
+            self.cache, self.host, [r.rid for r in self.active],
+            self._resume_order())
+        by_shard: Dict[int, List[Tuple[Tuple[int, int, int], int]]] = {}
+        by_seq: Dict[int, List[Tuple[int, int, int]]] = {}
+        for key, ppn in preds:
+            if self.staging.contains(key) or key in self.prefetch.in_flight:
+                continue        # already staged or on a channel
+            if not self.host.has(*key):
+                continue
+            if ppn is not None:
+                by_shard.setdefault(key[1], []).append((key, ppn))
+            else:
+                by_seq.setdefault(key[0], []).append(key)
+        page_bytes = self.page_bytes or self.cache.mgrs[0].residency.page_bytes
+        jobs = []
+        for s, group in sorted(by_shard.items()):
+            # Mapped targets: real ppns drive the contiguous-run cost.
+            jobs.append(self.dma.enqueue(
+                [k for k, _p in group], [p for _k, p in group], page_bytes,
+                [self.host.peek(*k) for k, _p in group],
+                self._clock_us, kind="prefetch"))
+        for rid, keys in sorted(by_seq.items()):
+            # Resume candidates have no frames yet: the transfer gathers
+            # into contiguous staging slots, so it merges into one DMA.
+            jobs.append(self.dma.enqueue(
+                keys, list(range(len(keys))), page_bytes,
+                [self.host.peek(*k) for k in keys],
+                self._clock_us, kind="prefetch"))
+        for job in jobs:
+            for key in job.keys:
+                self.prefetch.in_flight[key] = job
+            self.prefetch.stats["issued_pages"] += len(job.keys)
+            self.stats.fault_dmas += job.dma_count
+            self.stats.bytes_in += job.nbytes
+            self.stats.transfer_us += job.transfer_us
 
     def _prefill(self, req: Request):
         """Run prefill for an already-allocated request (see _admit_one)."""
@@ -459,8 +693,15 @@ class ServingEngine:
         return [r for r in self.active if r in appended]
 
     def step(self):
-        """One engine iteration: admit, one batched decode step, retire."""
+        """One engine iteration as a two-stage pipeline: drain completed
+        prefetches → admit → fault remaining misses (exposed) → decode
+        while the next step's prefetch is in flight → retire."""
         t0 = time.time()
+        if self.fault_mode == "async":
+            # Stage 0: publish transfers that finished during the last
+            # decode (double-buffer swap) so admission's resumes and this
+            # step's fault-in see them as hits.
+            self._drain_prefetches()
         self._admit()
         if not self.active:
             self.stats.wall_s += time.time() - t0
@@ -493,14 +734,24 @@ class ServingEngine:
         # batch-fault the missing ones in from the host tier.
         self._fault_in(seqs)
         ctx = self._ctx_global(self.cache.pack_ctx(seqs, self.mpps))
+        if self.fault_mode == "async":
+            # Stage 2: predicted next-step touches ride the DMA channels
+            # while the decode below computes — their µs become hidden.
+            self._issue_prefetch()
         toks = jnp.asarray([r.out[-1] for r in runnable], jnp.int32)
         pos = jnp.asarray([self.cache.seq_tokens[r.rid] - 1
                            for r in runnable], jnp.int32)
         state = self._stack_states(seqs)
+        t_dec = time.time()
         logits, self.pools, state = self._decode_jit(
             self.params, toks, pos, self.pools, ctx, state)
-        self._unstack_states(seqs, state)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # The decode step is the compute window in-flight DMAs hide in:
+        # modeled width if configured, else measured wall time.
+        self._clock_us += (self.decode_window_us
+                           if self.decode_window_us is not None
+                           else (time.time() - t_dec) * 1e6)
+        self._unstack_states(seqs, state)
         done_now = []
         for i, r in enumerate(runnable):
             r.out.append(int(nxt[i]))
@@ -514,6 +765,10 @@ class ServingEngine:
             self.cache.free(r.rid)
             self.states.pop(r.rid, None)
             self.host.drop_seq(r.rid)
+            dropped = self.staging.invalidate_seq(r.rid)
+            self.stats.prefetch_wasted += dropped
+            self.prefetch.stats["wasted_pages"] += dropped
+            self.prefetch.cancel_seq(r.rid)
             self._saved_tokens.pop(r.rid, None)
         # Execute any CAC compaction plans on-device.
         self._run_compaction()
@@ -573,4 +828,12 @@ class ServingEngine:
                 and steps < max_steps:
             self.step()
             steps += 1
+        if self.fault_mode == "async" and not (
+                self.queue or self.active or self.preempted):
+            # Settle transfers still riding the channels so the reported
+            # hidden/exposed/wasted split covers every issued byte (a
+            # prefetch issued on the final step would otherwise stay
+            # unaccounted while its µs sit in transfer_us).
+            self._clock_us = max(self._clock_us, self.dma.busy_until())
+            self._drain_prefetches()
         return steps

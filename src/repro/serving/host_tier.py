@@ -75,6 +75,13 @@ class HostPageStore:
         self.stats["swapped_in_pages"] += 1
         return kv
 
+    def peek(self, seq: int, shard: int, vpn: int
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Read a payload without dropping it (async prefetch staging:
+        the host copy stays authoritative until the page is actually
+        scattered into the pool, so a wrong prediction loses nothing)."""
+        return self._pages[(seq, shard, vpn)]
+
     def note_swap_out(self) -> None:
         """One whole-request preemption (for the bench's swap counts)."""
         self.stats["swap_out_requests"] += 1

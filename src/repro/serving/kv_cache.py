@@ -129,6 +129,36 @@ class ShardedKVCache:
             n += len(ppns)
         return n
 
+    def host_backed_pages(self, seqs: Sequence[int], host
+                          ) -> List[Tuple[int, int, int, int]]:
+        """Mapped-but-non-resident pages of ``seqs`` whose payload sits in
+        the host store, as [(seq, shard, vpn, ppn)] — the prefetchable
+        set, carrying the owner so callers need no reverse-map lookup."""
+        out: List[Tuple[int, int, int, int]] = []
+        for s, m in enumerate(self.mgrs):
+            for seq in seqs:
+                if seq not in m.tables:
+                    continue
+                table = m.tables[seq]
+                for vpn in table.mapped_vpns():
+                    ppn = table.ppn[vpn]
+                    if not m.residency.resident[ppn] \
+                            and host.has(seq, s, vpn):
+                        out.append((seq, s, vpn, ppn))
+        return out
+
+    def resident_page_count(self, seq: int) -> int:
+        """HBM-resident pages mapped by ``seq`` (the eviction-cost term
+        of the engine's cost-aware victim score)."""
+        n = 0
+        for m in self.mgrs:
+            if seq not in m.tables:
+                continue
+            table = m.tables[seq]
+            n += sum(1 for vpn in table.mapped_vpns()
+                     if m.residency.resident[table.ppn[vpn]])
+        return n
+
     def missing_pages(self, seqs: Sequence[int]
                       ) -> Dict[int, List[Tuple[int, int, int]]]:
         """touch(): per shard, the non-resident (ppn, owner, vpn) triples
