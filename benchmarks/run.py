@@ -13,6 +13,7 @@ Suites:
   serving  Mosaic vs GPU-MMU on the serving engine        (Figs. 5/6 analogue)
   oversub  2x-oversubscribed host-tier paging + swap cycle (paper §1/§4.2)
   overlap  sync vs async double-buffered fault-in + link contention (§7)
+  prefix-reuse  content-hash prefix cache + full-duplex DMA (§8)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -128,6 +129,12 @@ def main(argv=None):
                                 n_requests=8 if args.fast else 12)
                             + serving_bench.overlap_link_contention(
                                 n_access=n // 2)),
+        "prefix-reuse": lambda: (
+            serving_bench.prefix_reuse_compare(
+                n_requests=6 if args.fast else 8)
+            + serving_bench.duplex_compare(
+                n_requests=8 if args.fast else 10)
+            + serving_bench.duplex_sim_compare(n_access=n // 2)),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

@@ -31,6 +31,19 @@ Host-tier scenarios (DESIGN.md §6):
   into the TLB-timing simulator's multi-app runs: cross-app queueing on
   the shared host↔device link (contention cycles) shrinks as channels are
   added.
+* ``prefix_reuse_compare`` — the content-hash prefix cache (DESIGN.md §8):
+  requests sharing a system-prompt prefix admitted with the cache on vs
+  off.  Byte-identical tokens both ways; with the cache on, the shared
+  prefix's KV pages fault in from the host tier at admission (merged
+  DMAs through the async pipeline) instead of being re-decoded, so hit
+  admissions compute ~suffix/prompt of the cold prefill and complete
+  faster.
+* ``duplex_compare`` — outbound eviction/parking gathers on vs off the
+  DMA timeline (full-duplex "out" lanes): tokens unchanged, outbound
+  traffic visible with per-direction hidden/exposed/queue invariants.
+* ``duplex_sim_compare`` — the TLB simulator under an HBM capacity cap:
+  capacity writebacks ride the link; a full-duplex link keeps them off
+  the fault path, half-duplex queues faults behind them.
 """
 
 from __future__ import annotations
@@ -92,13 +105,20 @@ def serving_compare(n_requests=8) -> List[Dict]:
 def run_oversubscribed(manager_kind: str, *, factor: float = 2.0,
                        n_requests: int = 12, seed: int = 0,
                        fault_mode: str = "async",
-                       decode_window_us=None):
-    """2× (by default) oversubscribed multi-tenant run to completion."""
+                       decode_window_us=None, duplex: bool = True):
+    """2× (by default) oversubscribed multi-tenant run to completion.
+
+    The prefix cache stays OFF here: these prompts share no prefixes,
+    so parking on completion would only add gather traffic unrelated to
+    what the PR 1/PR 2 suites measure (their BENCH_serving.json
+    trajectories must stay comparable across PRs); reuse is measured by
+    its own ``prefix-reuse`` suite."""
     cfg = get_smoke_config("qwen2.5-3b")
     eng = ServingEngine(cfg, geometry=GEO, max_batch=6, max_seq=96,
                         manager_kind=manager_kind, seed=0,
                         oversubscription=factor, fault_mode=fault_mode,
-                        decode_window_us=decode_window_us)
+                        decode_window_us=decode_window_us, duplex=duplex,
+                        prefix_cache=False)
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
@@ -302,4 +322,198 @@ def overlap_link_contention(n_access: int = 2000) -> List[Dict]:
                  "claim_channels_cut_contention":
                      bool(contention[4] < contention[1]
                           and contention[1] > 0)})
+    return rows
+
+
+# ------------------------------------------------- prefix cache + duplex
+
+
+def run_prefix_workload(prefix_cache: bool, *, n_requests: int = 8,
+                        shared_tokens: int = 40, suffix_tokens: int = 8,
+                        max_new: int = 6, seed: int = 0,
+                        fault_mode: str = "async"):
+    """Shared-system-prompt workload in two waves (DESIGN.md §8).
+
+    Every prompt = one shared ``shared_tokens`` prefix (page-aligned) +
+    a distinct suffix.  Wave 1 (two requests) runs to completion and
+    parks the prefix; wave 2 (the rest) then admits against a warm
+    index — with the cache on, each admission faults the prefix's pages
+    in from the host tier and prefills only the suffix.
+    """
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=4, max_seq=128,
+                        manager_kind="mosaic", seed=0,
+                        prefix_cache=prefix_cache, fault_mode=fault_mode,
+                        decode_window_us=1000.0)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          shared_tokens).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        suf = rng.integers(0, cfg.vocab_size,
+                           suffix_tokens).astype(np.int32)
+        reqs.append(Request(rid=i, tenant=i % 3,
+                            prompt=np.concatenate([shared, suf]),
+                            max_new=max_new))
+    for r in reqs[:2]:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=500)
+    for r in reqs[2:]:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=1000)
+    assert all(r.done for r in reqs), "prefix workload did not drain"
+    eng.cache.check_invariants()
+    return eng, reqs
+
+
+def prefix_reuse_compare(n_requests: int = 8) -> List[Dict]:
+    """Cache-hit admission vs cold admission on the same request stream.
+
+    The claims: (a) tokens are byte-identical with the cache on or off
+    (application transparency extends to reuse); (b) a cache-hit
+    admission is cheaper than re-decoding the shared prefix — it
+    computes only the suffix's prefill tokens, and the modeled µs to
+    fault the reused pages in is below even the most conservative
+    recompute bound (one decode-window of compute per hit admission;
+    in reality re-prefilling the prefix costs far more); (c) the reused
+    pages really move through the DMA pipeline (admission-time
+    fault-in, not recompute): every reused page is a prefetch hit or
+    demand fault.  Wall-clock admission latencies are reported
+    (hit vs cold) but not gated on — the smoke model is op-dispatch
+    bound on CPU, so wall time under-states the compute saved.
+    """
+    rows = []
+    outs, engines = {}, {}
+    for mode, on in (("cache-on", True), ("cache-off", False)):
+        eng, reqs = run_prefix_workload(on, n_requests=n_requests)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        engines[mode] = eng
+        s = eng.stats
+        rows.append({
+            "bench": "prefix-reuse", "mode": mode,
+            "tok_per_s_cpu": round(s.tok_per_s(), 1),
+            "prefill_tokens": s.prefill_tokens,
+            "prefix_hits": s.prefix_hits,
+            "prefix_misses": s.prefix_misses,
+            "reused_tokens": s.prefix_reused_tokens,
+            "parked_pages": s.prefix_parked_pages,
+            "admit_hit_ms": round(s.admit_hit_mean_us() / 1e3, 1),
+            "admit_cold_ms": round(s.admit_cold_mean_us() / 1e3, 1),
+            "prefix_fault_us": round(s.prefix_fault_us, 1),
+            "faults": s.faults, "dma_count": s.fault_dmas,
+            "transfer_us": round(s.transfer_us, 1),
+            "exposed_us": round(s.fault_exposed_us, 1),
+            "hidden_us": round(s.fault_hidden_us, 1),
+            "prefetch_hits": s.prefetch_hits,
+        })
+    on, off = engines["cache-on"].stats, engines["cache-off"].stats
+    identical = outs["cache-on"] == outs["cache-off"]
+    # Modeled cost: faulting every reused prefix in cost prefix_fault_us;
+    # re-decoding it costs ≥ one decode window of compute per hit
+    # admission (a deliberately loose lower bound — full-prefix prefill
+    # is far more).  Deterministic, unlike CPU wall clock.
+    redecode_floor_us = on.prefix_hits * 1000.0
+    cheaper = (on.prefill_tokens < off.prefill_tokens
+               and on.prefix_hits > 0
+               and on.prefix_fault_us < redecode_floor_us)
+    via_dma = on.prefix_reused_tokens > 0 and on.faults >= (
+        on.prefix_reused_tokens // GEO.page_tokens)
+    rows.append({"bench": "prefix-reuse", "mode": "CHECK",
+                 "outputs_identical": identical,
+                 "saved_prefill_tokens":
+                     off.prefill_tokens - on.prefill_tokens,
+                 "admit_speedup": round(
+                     on.admit_cold_mean_us()
+                     / max(on.admit_hit_mean_us(), 1e-9), 2)})
+    rows.append({"bench": "prefix-reuse", "mode": "CLAIM",
+                 "claim_prefix_tokens_identical": identical,
+                 "claim_prefix_hit_cheaper_than_redecode": bool(cheaper),
+                 "claim_prefix_faulted_via_dma": bool(via_dma)})
+    assert identical, "prefix cache changed model outputs!"
+    return rows
+
+
+def duplex_compare(factor: float = 2.0, n_requests: int = 10) -> List[Dict]:
+    """Outbound (eviction/parking) traffic on vs off the DMA timeline.
+
+    ``duplex=True`` puts device→host gathers on the channels' "out"
+    lanes; ``duplex=False`` is PR 2's fault-in-only timeline.  Tokens
+    must not change — outbound modeling is accounting, not scheduling —
+    and the per-direction ``hidden + exposed == transfer`` invariant
+    must hold with eviction traffic visible.
+    """
+    rows = []
+    outs, engines = {}, {}
+    for mode, duplex in (("duplex", True), ("fault-in-only", False)):
+        eng, reqs = run_oversubscribed(
+            "mosaic", factor=factor, n_requests=n_requests,
+            decode_window_us=1000.0, duplex=duplex)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        engines[mode] = eng
+        s, d = eng.stats, eng.dma.stats
+        rows.append({
+            "bench": "serving-duplex", "mode": mode, "factor": factor,
+            "tok_per_s_cpu": round(s.tok_per_s(), 1),
+            "evict_pages": s.evict_pages, "evict_dmas": s.evict_dmas,
+            "bytes_out": s.bytes_out,
+            "evict_us": round(s.evict_us, 1),
+            "out_hidden_us": round(d["hidden_us_out"], 1),
+            "out_queue_us": round(d["queue_us_out"], 1),
+            "exposed_us": round(s.fault_exposed_us, 1),
+            "hidden_us": round(s.fault_hidden_us, 1),
+            "transfer_us": round(s.transfer_us, 1),
+        })
+    don = engines["duplex"].dma.stats
+    inv_in = abs(don["hidden_us"] + don["exposed_us"]
+                 - don["transfer_us"]) < 1e-6
+    inv_out = abs(don["hidden_us_out"] + don["exposed_us_out"]
+                  - don["transfer_us_out"]) < 1e-6
+    identical = outs["duplex"] == outs["fault-in-only"]
+    visible = (engines["duplex"].stats.bytes_out > 0
+               and engines["fault-in-only"].stats.bytes_out == 0)
+    rows.append({"bench": "serving-duplex", "mode": "CLAIM",
+                 "claim_duplex_tokens_identical": identical,
+                 "claim_duplex_outbound_on_timeline": bool(visible),
+                 "claim_duplex_split_invariants":
+                     bool(inv_in and inv_out)})
+    assert identical, "duplex outbound modeling changed model outputs!"
+    return rows
+
+
+def duplex_sim_compare(n_access: int = 2000,
+                       hbm_pages: int = 192) -> List[Dict]:
+    """Capacity writebacks in the TLB simulator: full- vs half-duplex.
+
+    With ``hbm_pages_per_app`` capped, every fault past the cap evicts
+    an LRU page — outbound link traffic.  Full-duplex keeps writebacks
+    on their own lanes (inbound fault contention unchanged-ish);
+    half-duplex makes faults queue behind them.
+    """
+    from repro.core.tlb_sim import SimConfig, TranslationSim
+    from repro.core.workloads import build_workload, homogeneous_names
+
+    names = homogeneous_names("dct", 3)
+    traces, _ = build_workload(names, "mosaic", seed=0, n_access=n_access)
+    rows = []
+    contention = {}
+    for duplex in (True, False):
+        sim = TranslationSim(
+            SimConfig(mode="mosaic", paging=True, dma_channels=1,
+                      duplex=duplex, hbm_pages_per_app=hbm_pages),
+            traces)
+        sim.run()
+        contention[duplex] = sim.link.contention_total()
+        rows.append({
+            "bench": "duplex-sim", "duplex": duplex,
+            "faults": sim.link.faults,
+            "writebacks": sim.link.writebacks,
+            "contention_cycles_in": round(sim.link.contention_total(), 1),
+            "contention_cycles_out":
+                round(sim.link.contention_out_total(), 1),
+        })
+    writebacks = rows[0]["writebacks"]
+    rows.append({"bench": "duplex-sim", "duplex": "CHECK",
+                 "claim_duplex_cuts_fault_contention":
+                     bool(writebacks > 0
+                          and contention[True] < contention[False])})
     return rows

@@ -14,9 +14,20 @@ fault-in; the report adds swap counts, faults, merged-DMA counts and
 modeled I/O-bus microseconds — and the outputs still match the
 pressure-free run token-for-token.
 
+With ``--shared-prefix N`` every prompt starts with the same N-token
+system prompt (the multi-tenant reuse setting, DESIGN.md §8): finished
+requests park the prefix's KV pages in the content-hash prefix cache,
+and later admissions fault them back in through the DMA pipeline instead
+of re-decoding them — watch ``prefix hit/miss`` and ``tok reused`` in
+the report, and the eviction/parking gathers riding the duplex "out"
+lanes.  ``--no-prefix-cache`` disables reuse for comparison (tokens are
+byte-identical either way).
+
     PYTHONPATH=src python examples/serve_multitenant.py --requests 10
     PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
         --oversubscribe 2
+    PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
+        --shared-prefix 40
 """
 
 import argparse
@@ -29,28 +40,40 @@ from repro.serving.engine import Request, ServingEngine
 
 
 def run(manager_kind: str, n_requests: int, seed: int,
-        oversubscribe: float = 1.0, fault_mode: str = "async"):
+        oversubscribe: float = 1.0, fault_mode: str = "async",
+        shared_prefix: int = 0, prefix_cache: bool = True):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
     eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
                         manager_kind=manager_kind, seed=seed,
                         oversubscription=oversubscribe,
-                        fault_mode=fault_mode)
+                        fault_mode=fault_mode, prefix_cache=prefix_cache)
     rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size,
+                          shared_prefix).astype(np.int32)
     reqs = []
     for i in range(n_requests):
         T = int(rng.integers(16, 72)) if oversubscribe == 1.0 \
             else int(rng.integers(56, 104))
+        prompt = rng.integers(0, cfg.vocab_size, T).astype(np.int32)
+        if shared_prefix:
+            prompt = np.concatenate([system, prompt])
         reqs.append(Request(
             rid=i, tenant=i % 3,
             # Tenant 0 is the premium tier: its requests are never the
             # preemption victim while lower tiers are runnable.
             priority=1 if i % 3 == 0 else 0,
-            prompt=rng.integers(0, cfg.vocab_size, T).astype(np.int32),
+            prompt=prompt,
             max_new=int(rng.integers(4, 12))))
-    for r in reqs:
+    # With a shared prefix, submit in two waves so the first completions
+    # park the prefix before the rest admit (reuse needs a warm index).
+    wave1 = reqs[:2] if shared_prefix else reqs
+    for r in wave1:
         eng.submit(r)
     steps = eng.run_until_drained(max_steps=5000)
+    for r in reqs[len(wave1):]:
+        eng.submit(r)
+    steps += eng.run_until_drained(max_steps=5000)
     assert all(r.done for r in reqs)
     return eng, reqs, steps
 
@@ -65,12 +88,19 @@ def main():
                     default="async",
                     help="async = double-buffered prefetch pipeline "
                          "(DESIGN.md §7); sync = PR 1's blocking fault-in")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of shared system prompt prepended to "
+                         "every request (prefix-cache reuse, DESIGN.md §8)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-hash prefix reuse (comparison)")
     args = ap.parse_args()
 
     results = {}
     for kind in ("mosaic", "gpu-mmu"):
         eng, reqs, steps = run(kind, args.requests, args.seed,
-                               args.oversubscribe, args.fault_mode)
+                               args.oversubscribe, args.fault_mode,
+                               shared_prefix=args.shared_prefix,
+                               prefix_cache=not args.no_prefix_cache)
         st = eng.cache.stats()
         s = eng.stats
         line = (f"[{kind:8}] {steps} engine steps | "
@@ -85,6 +115,12 @@ def main():
                      f"{s.transfer_us:.0f} us bus "
                      f"({s.fault_hidden_us:.0f} hidden / "
                      f"{s.fault_exposed_us:.0f} exposed)")
+        if args.shared_prefix:
+            line += (f" | prefix {s.prefix_hits}/{s.prefix_misses} "
+                     f"hit/miss | {s.prefix_reused_tokens} tok reused | "
+                     f"admit {s.admit_hit_mean_us() / 1e3:.0f} ms hit vs "
+                     f"{s.admit_cold_mean_us() / 1e3:.0f} ms cold | "
+                     f"out {s.bytes_out / 1024:.0f} KiB")
         print(line)
         print(f"           {s.summary()}")
         results[kind] = {r.rid: tuple(r.out) for r in reqs}

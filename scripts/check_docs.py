@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Docs gate (CI `docs` job; runnable locally):
+
+1. `README.md` exists and is a real front door (not a stub);
+2. every module under `src/repro/` has a module docstring;
+3. when BASE_REF is set (pull requests), the diff against it updates
+   `ROADMAP.md` or `CHANGES.md` — every PR leaves a trail for the next
+   session.
+
+    PYTHONPATH=src python scripts/check_docs.py
+    BASE_REF=origin/main python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def check_readme() -> list:
+    readme = ROOT / "README.md"
+    if not readme.exists():
+        return ["README.md is missing"]
+    text = readme.read_text()
+    errs = []
+    if len(text) < 1000:
+        errs.append("README.md looks like a stub (<1000 chars)")
+    for needle in ("pytest", "benchmarks.run"):
+        if needle not in text:
+            errs.append(f"README.md does not mention `{needle}`")
+    return errs
+
+
+def check_docstrings() -> list:
+    errs = []
+    for path in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        src = path.read_text()
+        if not src.strip():
+            continue                       # empty __init__ namespace file
+        try:
+            mod = ast.parse(src)
+        except SyntaxError as e:           # pragma: no cover
+            errs.append(f"{path.relative_to(ROOT)}: syntax error: {e}")
+            continue
+        if ast.get_docstring(mod) is None:
+            errs.append(f"{path.relative_to(ROOT)}: missing module "
+                        f"docstring")
+    return errs
+
+
+def check_changelog(base_ref: str) -> list:
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", f"{base_ref}...HEAD"],
+            cwd=ROOT, capture_output=True, text=True, check=True).stdout
+    except subprocess.CalledProcessError as e:
+        return [f"git diff against {base_ref} failed: {e.stderr.strip()}"]
+    changed = set(out.split())
+    if not changed:
+        return []                          # empty diff: nothing to log
+    if not changed & {"ROADMAP.md", "CHANGES.md"}:
+        return ["PR does not update ROADMAP.md or CHANGES.md "
+                f"(changed: {sorted(changed)[:10]}…)"]
+    return []
+
+
+def main() -> int:
+    errs = check_readme() + check_docstrings()
+    base = os.environ.get("BASE_REF", "").strip()
+    if base:
+        errs += check_changelog(base)
+    for e in errs:
+        print(f"docs-check FAIL: {e}")
+    if not errs:
+        print("docs-check OK: README present, all src/repro modules "
+              "documented" + (f", changelog updated vs {base}" if base
+                              else ""))
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,10 @@
-"""CoCoA — Contiguity-Conserving Allocation (paper §2).
+"""CoCoA — Contiguity-Conserving Allocation (paper §2; DESIGN.md §1).
+
+The first of Mosaic's three cooperating mechanisms (CoCoA allocates,
+the :mod:`In-Place Coalescer <repro.core.coalescer>` promotes, :mod:`CAC
+<repro.core.compaction>` repairs): the *allocation-time* half of the
+paper's argument that contiguity is nearly free to **conserve** if you
+never break it, whereas recovering it later costs data migration.
 
 Allocation policy:
 
@@ -18,6 +24,25 @@ Allocation policy:
 Alignment invariant maintained throughout: a page mapped at virtual page
 number ``vpn`` is placed at slot ``vpn % frame_pages`` of its frame whenever
 possible, which is exactly the In-Place Coalescer's promotion condition.
+
+What conserved contiguity buys downstream (the claims the benches pin):
+
+* *translation reach* — coalesced frames translate as large pages in the
+  TLB-timing simulator (:mod:`repro.core.tlb_sim`, paper Figs. 1/5/6) and
+  take the frame-granular fast path of the dual-granularity Pallas
+  paged-attention kernel (DESIGN.md §4);
+* *transfer merging* — physically-contiguous base pages merge into single
+  DMA descriptors on the host↔device link (one setup cost per run, not
+  per page), which is why the serving engine's swap/fault batches and the
+  prefix cache's admission fault-ins are cheap under Mosaic
+  (:class:`repro.core.demand_paging.FaultBatch`, DESIGN.md §6/§8);
+* *whole-frame return* — the soft guarantee means a finished sequence
+  hands back intact frames, so multi-tenant churn does not splinter the
+  pool (the ``memory_bloat``/fragmentation comparisons vs ``gpu-mmu``).
+
+``OutOfMemory`` raised here is a *scheduling* signal, not a failure: the
+serving engine responds with CAC compaction, then cost-aware preemption
+to the host tier (DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -1,5 +1,11 @@
 """CAC — Contiguity-Aware Compaction (paper §2, memory deallocation path).
 
+The third of Mosaic's mechanisms: where :mod:`CoCoA <repro.core.cocoa>`
+*conserves* contiguity and the :mod:`coalescer <repro.core.coalescer>`
+*exploits* it for free, CAC *repairs* it with bounded copies when
+deallocation-driven fragmentation finally breaks it — the only point in
+the whole design where data actually moves on-device.
+
 When deallocation leaves large pages with high internal fragmentation, the
 runtime part of CAC (this module) (1) splinters those large pages back to
 base pages (metadata-only, via the In-Place Coalescer) and (2) plans a
@@ -17,6 +23,16 @@ The plan is computed greedily per owner (frames hold one owner's pages only
 — CoCoA's soft guarantee — so compaction never mixes protection domains):
 source frames are the most-fragmented, destinations are the least-fragmented
 partial frames; pages move src→dst until sources empty.
+
+Ordering contract with the engine (the subtle part): tables are rewritten
+at *plan* time, payloads move at *execution* time — so the engine lands
+pending ``CopyOp``s (``_run_compaction``) before anything reads or
+gathers through the rewritten tables: before prefill, before decode,
+before preemption/parking gathers (DESIGN.md §6/§8).  Residency rides
+along via ``ResidencyTracker.on_copy`` — a host-backed (non-resident)
+page stays host-backed at its new physical location, which is what lets
+compaction run safely under the host tier's demand paging and the
+prefix cache's demoted admission pages.
 """
 
 from __future__ import annotations

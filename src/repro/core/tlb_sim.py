@@ -81,6 +81,17 @@ class SimConfig:
     # transfers of different apps proceed concurrently, shrinking the
     # cross-app interference the contention stats measure.
     dma_channels: int = 1
+    # Full-duplex link (serving/dma.py's model, DESIGN.md §8): inbound
+    # faults and outbound writebacks get independent per-channel
+    # timelines; False degrades to half-duplex, where eviction traffic
+    # queues against fault-ins on the same channels.
+    duplex: bool = True
+    # Device-memory cap per app in resident base pages (None = unbounded,
+    # the paper's cold-fault-only model).  With a cap, a fault past the
+    # cap evicts the app's LRU page first — an outbound writeback on the
+    # link — so the sim generates the two-direction traffic the duplex
+    # model distinguishes.
+    hbm_pages_per_app: Optional[int] = None
     clock_ghz: float = 1.02          # shader clock (Table 1: 1020 MHz)
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     # Page-size mode: "mosaic" uses per-frame coalesced bits from the
@@ -173,28 +184,52 @@ class Link:
     queueing delay a fault pays because the shared link is busy — almost
     always with *another* app's transfer in a multi-app run — is tracked
     per app in ``contention_cycles``.
+
+    The link is **full-duplex** by default (``cfg.duplex``, DESIGN.md
+    §8): outbound writebacks (capacity evictions under
+    ``cfg.hbm_pages_per_app``) occupy their own per-channel timelines
+    and contend only with each other (``contention_cycles_out``); with
+    ``duplex=False`` both directions share one timeline, so eviction
+    traffic queues *inbound* faults too — the half-duplex penalty the
+    duplex benches measure.
     """
 
     def __init__(self, cfg: SimConfig, n_apps: int = 1):
         self.cfg = cfg
-        self.channel_busy = [0.0] * max(1, cfg.dma_channels)
+        n = max(1, cfg.dma_channels)
+        self.channel_busy = [0.0] * n                   # inbound lanes
+        # Half-duplex shares the same list object (either direction's
+        # transfer occupies the single per-channel timeline).
+        self.channel_busy_out = [0.0] * n if cfg.duplex \
+            else self.channel_busy
         self.faults = 0
         self.fault_cycles_total = 0.0
-        self.contention_cycles = [0.0] * n_apps
+        self.contention_cycles = [0.0] * n_apps         # inbound
+        self.writebacks = 0
+        self.writeback_cycles_total = 0.0
+        self.contention_cycles_out = [0.0] * n_apps
 
     @property
     def busy_until(self) -> float:
-        return max(self.channel_busy)
+        return max(max(self.channel_busy), max(self.channel_busy_out))
 
-    def fault(self, now: float, app: int = 0) -> float:
+    def _occupy(self, lanes, now: float, transfer: float):
+        ch = min(range(len(lanes)), key=lambda i: lanes[i])
+        begin = max(now, lanes[ch])
+        lanes[ch] = begin + transfer
+        return begin
+
+    def _costs(self):
         c = self.cfg
         k = max(1, c.fault_amortize)
-        transfer = (c.page_bytes / (c.link.bandwidth_GBps * 1e9)) * c.clock_ghz * 1e9 / k
+        transfer = (c.page_bytes / (c.link.bandwidth_GBps * 1e9)) \
+            * c.clock_ghz * 1e9 / k
         setup = c.link.setup_us * c.clock_ghz * 1e3 / k
-        ch = min(range(len(self.channel_busy)),
-                 key=lambda i: self.channel_busy[i])
-        begin = max(now, self.channel_busy[ch])
-        self.channel_busy[ch] = begin + transfer    # channel occupancy
+        return transfer, setup
+
+    def fault(self, now: float, app: int = 0) -> float:
+        transfer, setup = self._costs()
+        begin = self._occupy(self.channel_busy, now, transfer)
         fin = begin + setup + transfer              # faulting warp's latency
         self.faults += 1
         self.fault_cycles_total += fin - now
@@ -202,8 +237,27 @@ class Link:
             self.contention_cycles[app] += begin - now
         return fin
 
+    def writeback(self, now: float, app: int = 0) -> float:
+        """Outbound device→host eviction transfer.
+
+        Write-back buffering keeps it off the faulting warp's critical
+        path — the return value is the channel-occupancy end, not a warp
+        stall — but the transfer occupies an "out" lane (or, when
+        half-duplex, the shared lane, where it queues future faults).
+        """
+        transfer, _setup = self._costs()
+        begin = self._occupy(self.channel_busy_out, now, transfer)
+        self.writebacks += 1
+        self.writeback_cycles_total += begin + transfer - now
+        if app < len(self.contention_cycles_out):
+            self.contention_cycles_out[app] += begin - now
+        return begin + transfer
+
     def contention_total(self) -> float:
         return float(sum(self.contention_cycles))
+
+    def contention_out_total(self) -> float:
+        return float(sum(self.contention_cycles_out))
 
 
 # --------------------------------------------------------------------------- traces
@@ -260,7 +314,10 @@ class TranslationSim:
         self.l2_large = LRU(cfg.l2_large_entries)
         self.walker = Walker(cfg.walker_slots, cfg.walk_latency)
         self.link = Link(cfg, n_apps=n)
-        self.resident: List[set] = [set() for _ in range(n)]
+        # Per-app resident pages in LRU order (OrderedDict preserves the
+        # set-like membership tests while supporting capacity eviction).
+        self.resident: List[OrderedDict] = [OrderedDict() for _ in range(n)]
+        self.fault_count = [0] * n
         self.mshr: Dict[Tuple[int, int, bool], float] = {}
 
     # -- one translation ---------------------------------------------------------
@@ -300,11 +357,21 @@ class TranslationSim:
 
         # Demand paging: first touch of a base page faults it in. (Transfers
         # are always base-page-granular — Mosaic's point; the *translation*
-        # above may still be large.)
+        # above may still be large.)  Under an HBM capacity cap, faulting
+        # past the cap first writes the LRU resident page back to host —
+        # outbound traffic on the (duplex) link.
         if cfg.paging and not cfg.warm:
             ppn = int(tr.ppn[i])
-            if ppn not in self.resident[app]:
-                self.resident[app].add(ppn)
+            res = self.resident[app]
+            if ppn in res:
+                res.move_to_end(ppn)
+            else:
+                cap = cfg.hbm_pages_per_app
+                if cap is not None and len(res) >= cap:
+                    res.popitem(last=False)         # evict LRU
+                    self.link.writeback(now, app)
+                res[ppn] = True
+                self.fault_count[app] += 1
                 done = max(done, self.link.fault(now, app))
         return done
 
@@ -347,7 +414,9 @@ class TranslationSim:
                     cycles=finish_time[a],
                     l1_hit=h / max(h + m, 1),
                     l2_hit=0.0,  # filled by caller from shared L2 (per-sim)
-                    faults=len(self.resident[a]),
+                    # Fault *events* — equals the resident-set size only
+                    # while hbm_pages_per_app is uncapped (no re-faults).
+                    faults=self.fault_count[a],
                 )
             )
         return out

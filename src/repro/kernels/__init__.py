@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+One module per kernel (``paged_attention``, ``page_compact``,
+``flash_attention``, ``ssd_scan``) plus ``ops.py`` — the dispatch layer
+the engine calls (``use_pallas`` flips Pallas vs the pure-JAX oracles in
+``ref.py``).  Kernels exist ONLY for hot-spots the paper itself
+optimizes; everything else stays plain jax.
+"""

@@ -1,10 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-MUST be run as its own process (the two lines above must execute before
-any jax import anywhere — jax locks the device count at first init):
+MUST be run as its own process (the XLA_FLAGS line below must execute
+before any jax import anywhere — jax locks the device count at first
+init):
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
         --shape decode_32k --mesh pod          # 16x16 (256 chips)
@@ -17,6 +15,9 @@ For each cell it prints (and appends to --out as JSON lines):
     all-reduce, reduce-scatter, all-to-all, collective-permute);
   * the three roofline terms vs. TPU v5e peaks (DESIGN/EXPERIMENTS).
 """
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json

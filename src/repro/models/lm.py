@@ -202,17 +202,34 @@ class LM:
     # ------------------------------------------------------------- prefill
 
     def prefill(self, params, batch, pools, ctx: PageCtx,
-                last_pos=None):
+                last_pos=None, prefix_kv=None, prefix_len: int = 0):
         """Full-sequence forward; writes KV/latents into the paged pools.
 
         ``last_pos`` [B]: index of the last *valid* token per sequence
         (prompts are right-padded to a page multiple); defaults to T-1.
         Returns (logits at last_pos [B,V], pools', state).
+
+        Suffix-only prefill (prefix-cache reuse, DESIGN.md §8): with
+        ``prefix_kv=(k [L,B,P,Hkv,dh], v [...])`` and ``prefix_len=P``
+        (a page multiple), ``tokens`` holds only the suffix — positions
+        start at P, queries attend to the cached prefix KV, and only the
+        suffix pages are scattered into the pool (the prefix pages are
+        restored through the host tier).  ``last_pos`` stays an index
+        into the given (suffix) tokens.  Transformer families only —
+        recurrent state (ssm/hybrid), cross-attention (encdec) and MLA
+        latents are not prefix-cacheable here.
         """
         cfg = self.cfg
         params = cast(params, jnp.dtype(cfg.dtype))
         tokens = batch["tokens"]
         B, T = tokens.shape
+        if prefix_len:
+            assert prefix_kv is not None
+            # Dense-only: MoE capacity is a function of the forward's
+            # token count (ceil(T·top_k/E·cf)), so a suffix-only pass
+            # drops different tokens than the full pass — not bitwise.
+            assert cfg.family == "dense" and cfg.mla is None, \
+                f"prefix-cache reuse unsupported for {cfg.family}/mla"
         x = self._embed(params, tokens)
         state: Dict[str, Any] = {}
         if cfg.family == "vlm":
@@ -220,7 +237,7 @@ class LM:
             pe = jnp.einsum("bpd,de->bpe", pe,
                             params["frontend_proj"].astype(x.dtype))
             x = jnp.concatenate([pe, x], axis=1)
-        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+        positions = jnp.broadcast_to(prefix_len + jnp.arange(x.shape[1])[None],
                                      (B, x.shape[1]))
         if cfg.family == "encdec":
             src = batch["src_embeds"].astype(x.dtype)
@@ -241,17 +258,25 @@ class LM:
             fd = cfg.moe.first_dense if cfg.moe else 0
             if fd:
                 kp, vp = pools
+                pk0 = pk1 = None
+                if prefix_kv is not None:
+                    pk, pv = prefix_kv
+                    pk0, pk1 = (pk[:fd], pv[:fd]), (pk[fd:], pv[fd:])
                 x, (kp0, vp0) = decoder_stack_prefill(
                     _dense_view(cfg), params["decoder_prefix"], x, positions,
-                    (kp[:fd], vp[:fd]), ctx)
+                    (kp[:fd], vp[:fd]), ctx, prefix_kv=pk0,
+                    tok_offset=prefix_len)
                 x, (kp1, vp1) = decoder_stack_prefill(
                     cfg, params["decoder"], x, positions,
-                    (kp[fd:], vp[fd:]), ctx)
+                    (kp[fd:], vp[fd:]), ctx, prefix_kv=pk1,
+                    tok_offset=prefix_len)
                 pools = (jnp.concatenate([kp0, kp1], axis=0),
                          jnp.concatenate([vp0, vp1], axis=0))
             else:
                 x, pools = decoder_stack_prefill(cfg, params["decoder"], x,
-                                                 positions, pools, ctx)
+                                                 positions, pools, ctx,
+                                                 prefix_kv=prefix_kv,
+                                                 tok_offset=prefix_len)
         if last_pos is None:
             x_last = x[:, -1:, :]
         else:

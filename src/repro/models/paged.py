@@ -59,7 +59,8 @@ def write_latent(latent_pool, lat_new, wpage, wslot):
 
 
 def write_prefill_kv(k_pool, v_pool, k_seq, v_seq, tables, *,
-                     shard_idx=0, n_shards: int = 1, frame_pages: int = 16):
+                     shard_idx=0, n_shards: int = 1, frame_pages: int = 16,
+                     tok_offset: int = 0):
     """Scatter a prefilled sequence's KV into the local sub-pool en masse.
 
     k_seq/v_seq: [B, T, n_kv, dh] (T multiple of page_tokens; the full
@@ -74,19 +75,29 @@ def write_prefill_kv(k_pool, v_pool, k_seq, v_seq, tables, *,
     and we gather that page's tokens from the replicated sequence.  With
     n_shards == 1 this degenerates to vpn == j (the single-shard and
     test path).
+
+    ``tok_offset`` supports suffix-only prefill (prefix-cache reuse,
+    DESIGN.md §8): ``k_seq`` then holds tokens ``[tok_offset,
+    tok_offset + T)`` of the sequence, and only pages fully inside that
+    window are written — the cached-prefix pages ahead of the window are
+    restored by the host-tier fault-in path instead.  ``tok_offset`` must
+    be a page multiple.
     """
     B, T, n_kv, dh = k_seq.shape
     dh_v = v_seq.shape[-1]                                # may differ (MLA)
     ptok = k_pool.shape[1]
     assert T % ptok == 0
+    assert tok_offset % ptok == 0, (tok_offset, ptok)
     m = tables.shape[1]
     j = jnp.arange(m)
     gframe = shard_idx + (j // frame_pages) * n_shards
     vpn = gframe * frame_pages + (j % frame_pages)        # [m]
     tok0 = vpn * ptok
     tb = tables.reshape(-1)                               # [B*m]
-    own = (tb >= 0) & jnp.tile(tok0 < T, B)
-    idx = jnp.clip(tok0[:, None] + jnp.arange(ptok)[None, :], 0, T - 1)
+    own = (tb >= 0) & jnp.tile(
+        (tok0 >= tok_offset) & (tok0 < tok_offset + T), B)
+    idx = jnp.clip(tok0[:, None] - tok_offset
+                   + jnp.arange(ptok)[None, :], 0, T - 1)
     # Holes scatter out of bounds and are dropped (never clamp to a live
     # page: duplicate scatter indices with different payloads are
     # order-undefined).

@@ -175,16 +175,29 @@ def _tp_geometry(cfg: ModelConfig, mesh):
 
 
 def attn_block_train(cfg: ModelConfig, p, x, positions, *, causal=True,
-                     kv_len=None):
+                     kv_len=None, prefix_kv=None):
+    """Full-sequence attention; ``prefix_kv=(pk, pv)`` ([B, P, Hkv, dh],
+    already roped — cached pool bytes) prepends P cached-context keys the
+    in-flight queries attend to causally (suffix-only prefill; the caller
+    must offset ``positions`` by P).  Returns (out, k, v) with k/v
+    covering the in-flight tokens only."""
     mesh = _ambient_mesh()
     geo = _tp_geometry(cfg, mesh)
-    if geo is None:
-        # Auto-sharded fallback (no mesh / fsdp / awkward head counts).
+    if geo is None or prefix_kv is not None:
+        # Auto-sharded fallback (no mesh / fsdp / awkward head counts),
+        # and the only path carrying cached-prefix KV (suffix prefill is
+        # engine-side, mesh-free; the TP path asserts it never sees one).
         q, k, v = _project_qkv(cfg, p, x, positions)
         q = shd(q, DP, None, "model", None)
         k = shd(k, DP, None, None, None)
         v = shd(v, DP, None, None, None)
-        o = attention(q, k, v, causal=causal, kv_len=kv_len)
+        if prefix_kv is not None:
+            pk, pv = prefix_kv
+            o = attention(q, jnp.concatenate([pk.astype(k.dtype), k], axis=1),
+                          jnp.concatenate([pv.astype(v.dtype), v], axis=1),
+                          causal=causal, q_offset=pk.shape[1], kv_len=kv_len)
+        else:
+            o = attention(q, k, v, causal=causal, kv_len=kv_len)
         o = shd(o, DP, None, "model", None)
         return psum_point(jnp.einsum("bthd,hdk->btk", o, p["wo"])), k, v
     return _attn_block_train_tp(cfg, p, x, positions, mesh, geo,
@@ -315,13 +328,16 @@ def paged_attn_op(q, k_new, v_new, k_pool, v_pool, ctx: PageCtx, *, scale):
               ctx.wpage, ctx.wslot)
 
 
-def prefill_write_op(k_seq, v_seq, k_pool, v_pool, ctx: PageCtx):
+def prefill_write_op(k_seq, v_seq, k_pool, v_pool, ctx: PageCtx,
+                     tok_offset: int = 0):
     """Scatter prefilled K/V [B,T,n_kv,dh] into the paged pool.
 
     Each page shard owns the stripe of frames f ≡ shard (mod S); the local
     writer reconstructs every local page's global vpn from that striping
     (ShardedKVCache contract) and gathers its tokens from the replicated
-    sequence.
+    sequence.  ``tok_offset`` (a page multiple) shifts the window for
+    suffix-only prefill: only pages at token positions ≥ the offset are
+    written (prefix-cache reuse, DESIGN.md §8).
     """
     mesh = _ambient_mesh()
 
@@ -334,7 +350,8 @@ def prefill_write_op(k_seq, v_seq, k_pool, v_pool, ctx: PageCtx):
             n_shards *= n
         return paged.write_prefill_kv(
             k_pool, v_pool, k_seq, v_seq, tables, shard_idx=shard,
-            n_shards=n_shards, frame_pages=ctx.frame_pages)
+            n_shards=n_shards, frame_pages=ctx.frame_pages,
+            tok_offset=tok_offset)
 
     if mesh is None:
         return local(k_seq, v_seq, k_pool, v_pool, ctx.tables)
@@ -479,17 +496,27 @@ def decoder_stack_train(cfg: ModelConfig, params, x, positions, *,
     return x, aux
 
 
-def _layer_prefill(cfg: ModelConfig, lp, x, positions, k_pool, v_pool, ctx):
-    """Like train, but also scatters this layer's K/V into its pool slice."""
+def _layer_prefill(cfg: ModelConfig, lp, x, positions, k_pool, v_pool, ctx,
+                   prefix_kv=None, tok_offset: int = 0):
+    """Like train, but also scatters this layer's K/V into its pool slice.
+
+    ``prefix_kv``: this layer's cached-prefix K/V ([B, P, Hkv, dh] pair)
+    for suffix-only prefill; the cached pages themselves are NOT
+    re-written (``tok_offset`` masks them out of the scatter) — the
+    host-tier fault-in restores them from the prefix cache instead.
+    """
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
+        assert prefix_kv is None, "prefix-cache reuse unsupported for MLA"
         from repro.models.mla import mla_block_train
         a, lat = mla_block_train(cfg, lp["attn"], h, positions)
         k_pool, v_pool = prefill_write_op(lat["k"], lat["v"], k_pool,
                                           v_pool, ctx)
     else:
-        a, k, v = attn_block_train(cfg, lp["attn"], h, positions)
-        k_pool, v_pool = prefill_write_op(k, v, k_pool, v_pool, ctx)
+        a, k, v = attn_block_train(cfg, lp["attn"], h, positions,
+                                   prefix_kv=prefix_kv)
+        k_pool, v_pool = prefill_write_op(k, v, k_pool, v_pool, ctx,
+                                          tok_offset=tok_offset)
     x = x + a
     h = rms_norm(x, lp["ln2"], cfg.norm_eps)
     f = moe_block(cfg, lp["moe"], h)[0] if cfg.moe is not None else \
@@ -497,15 +524,23 @@ def _layer_prefill(cfg: ModelConfig, lp, x, positions, k_pool, v_pool, ctx):
     return shd(x + f, DP, None, None), k_pool, v_pool
 
 
-def decoder_stack_prefill(cfg: ModelConfig, params, x, positions, pools, ctx):
-    """pools: (k_pool [L,...], v_pool [L,...]) stacked over layers."""
+def decoder_stack_prefill(cfg: ModelConfig, params, x, positions, pools, ctx,
+                          prefix_kv=None, tok_offset: int = 0):
+    """pools: (k_pool [L,...], v_pool [L,...]) stacked over layers.
+
+    ``prefix_kv``: stacked cached-prefix K/V ([L, B, P, Hkv, dh] pair)
+    for suffix-only prefill (prefix-cache reuse, DESIGN.md §8); each
+    layer's slice rides the scan alongside its pool slice."""
     k_pools, v_pools = pools
 
     def body(carry, inp):
         x = carry
         l, lp = inp
+        pkv = (None if prefix_kv is None
+               else (prefix_kv[0][l], prefix_kv[1][l]))
         x, kp, vp = _layer_prefill(cfg, lp, x, positions,
-                                   k_pools[l], v_pools[l], ctx)
+                                   k_pools[l], v_pools[l], ctx,
+                                   prefix_kv=pkv, tok_offset=tok_offset)
         return x, (kp, vp)
 
     L = k_pools.shape[0]

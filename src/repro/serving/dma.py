@@ -19,7 +19,11 @@ Three cooperating pieces (DESIGN.md §7):
   waited-on portion that had already elapsed) and *exposed* µs (the
   portion the engine stalled on); ``hidden + exposed == transfer_us``
   for every job, and channel-queueing delay beyond the transfer itself
-  is tracked separately as ``queue_us``.
+  is tracked separately as ``queue_us``.  The link is *full-duplex*
+  (DESIGN.md §8): outbound device→host traffic — preemption eviction
+  gathers and cold-prefix parking — rides the same channels on
+  independent per-direction timelines, accounted under the ``*_out``
+  stat keys with the same per-direction hidden/exposed/queue split.
 * :class:`StagingBuffer` — the double-buffered staging region completed
   prefetches scatter into.  Ownership rule: the DMA engine's completions
   land only in the *back* buffer; the engine's fault-in path reads only
@@ -65,6 +69,11 @@ class DMAJob:
     demand faults (device-side scatter targets), synthetic contiguous
     staging slots for resume prefetches (the staging region is a
     contiguous device buffer, so a host→staging gather always merges).
+
+    ``direction`` is the link direction the job occupies: ``"in"``
+    (host→device: demand faults, prefetches) or ``"out"`` (device→host:
+    preemption eviction gathers, cold-prefix parking).  On a full-duplex
+    link the two directions have independent per-channel timelines.
     """
 
     job_id: int
@@ -73,7 +82,8 @@ class DMAJob:
     start_us: float
     done_us: float
     payloads: List[Tuple[np.ndarray, np.ndarray]]
-    kind: str = "prefetch"          # "prefetch" | "demand"
+    kind: str = "prefetch"          # "prefetch" | "demand" | "evict" | "park"
+    direction: str = "in"           # "in" (h→d) | "out" (d→h)
     channel: int = -1
     settled: bool = False           # hidden/exposed already accounted
 
@@ -91,54 +101,85 @@ class DMAJob:
 
 
 class AsyncDMAEngine:
-    """N-channel host→device DMA timeline with hidden/exposed accounting.
+    """N-channel host⇄device DMA timeline with hidden/exposed accounting.
 
     The clock is *modeled* microseconds supplied by the caller (the
     engine advances it by measured decode wall time and by exposed
     stalls), so the engine, the benches and the tests all reason on one
     explicit timeline.
+
+    The link is **full-duplex** by default (real PCIe is): each channel
+    carries one inbound (host→device) and one outbound (device→host)
+    transfer concurrently, so eviction gathers riding the "out" lanes
+    never delay fault-ins riding the "in" lanes — they only queue behind
+    other outbound traffic.  ``duplex=False`` degrades to a half-duplex
+    link where both directions contend for the same channel timeline
+    (the PR 2 single-timeline model, kept for comparison benches).
+
+    Stats are kept per direction: the un-suffixed keys (``transfer_us``,
+    ``hidden_us``, ``exposed_us``, ``queue_us``, ``pages``, ``bytes``,
+    ``dma_count``) are the **inbound** totals — exactly what they meant
+    before outbound modeling existed — and the ``*_out`` keys account the
+    outbound lanes.  The per-direction invariant ``hidden + exposed ==
+    Σ transfer_us`` holds over settled jobs in each direction.
     """
 
     def __init__(self, link: Optional[LinkModel] = None,
-                 n_channels: int = 2):
+                 n_channels: int = 2, duplex: bool = True):
         assert n_channels >= 1
         self.link = link or LinkModel()
-        self.channel_free = [0.0] * n_channels
+        self.duplex = duplex
+        free_in = [0.0] * n_channels
+        # Half-duplex shares the *same list object*, so either direction's
+        # enqueue occupies the single per-channel timeline.
+        free_out = [0.0] * n_channels if duplex else free_in
+        self.channel_free = {"in": free_in, "out": free_out}
         self._ids = itertools.count()
         self.in_flight: Dict[int, DMAJob] = {}
         self.stats = {
             "jobs": 0, "prefetch_jobs": 0, "demand_jobs": 0,
+            "evict_jobs": 0, "park_jobs": 0,
             "pages": 0, "dma_count": 0, "bytes": 0,
             "transfer_us": 0.0,     # Σ per-job transfer_us (hidden+exposed)
             "hidden_us": 0.0,       # overlapped with compute
             "exposed_us": 0.0,      # stalled-on portion of transfers
             "queue_us": 0.0,        # stalled waiting for a busy channel
+            "pages_out": 0, "dma_count_out": 0, "bytes_out": 0,
+            "transfer_us_out": 0.0, "hidden_us_out": 0.0,
+            "exposed_us_out": 0.0, "queue_us_out": 0.0,
         }
+
+    @staticmethod
+    def _sfx(direction: str) -> str:
+        return "" if direction == "in" else "_out"
 
     # ------------------------------------------------------------- enqueue
 
     def enqueue(self, keys: Sequence[Key], ppns: Sequence[int],
                 page_bytes: int,
                 payloads: Sequence[Tuple[np.ndarray, np.ndarray]],
-                now_us: float, kind: str = "prefetch") -> DMAJob:
+                now_us: float, kind: str = "prefetch",
+                direction: str = "in") -> DMAJob:
         """Queue one gather-transfer; returns the job with its timeline."""
         assert len(keys) == len(ppns) == len(payloads)
+        assert direction in ("in", "out"), direction
         batch = FaultBatch([int(p) for p in ppns], page_bytes, self.link)
-        ch = min(range(len(self.channel_free)),
-                 key=lambda c: self.channel_free[c])
-        start = max(float(now_us), self.channel_free[ch])
+        free = self.channel_free[direction]
+        ch = min(range(len(free)), key=lambda c: free[c])
+        start = max(float(now_us), free[ch])
         done = start + batch.transfer_us
-        self.channel_free[ch] = done
+        free[ch] = done
         job = DMAJob(job_id=next(self._ids), keys=list(keys), batch=batch,
                      start_us=start, done_us=done, payloads=list(payloads),
-                     kind=kind, channel=ch)
+                     kind=kind, direction=direction, channel=ch)
         self.in_flight[job.job_id] = job
+        sfx = self._sfx(direction)
         self.stats["jobs"] += 1
         self.stats[f"{kind}_jobs"] += 1
-        self.stats["pages"] += len(job.keys)
-        self.stats["dma_count"] += job.dma_count
-        self.stats["bytes"] += job.nbytes
-        self.stats["transfer_us"] += job.transfer_us
+        self.stats[f"pages{sfx}"] += len(job.keys)
+        self.stats[f"dma_count{sfx}"] += job.dma_count
+        self.stats[f"bytes{sfx}"] += job.nbytes
+        self.stats[f"transfer_us{sfx}"] += job.transfer_us
         return job
 
     # ------------------------------------------------------------- settle
@@ -154,10 +195,11 @@ class AsyncDMAEngine:
         """
         stall = max(0.0, job.done_us - now_us)
         if not job.settled:
+            sfx = self._sfx(job.direction)
             exposed = min(stall, job.transfer_us)
-            self.stats["exposed_us"] += exposed
-            self.stats["hidden_us"] += job.transfer_us - exposed
-            self.stats["queue_us"] += stall - exposed
+            self.stats[f"exposed_us{sfx}"] += exposed
+            self.stats[f"hidden_us{sfx}"] += job.transfer_us - exposed
+            self.stats[f"queue_us{sfx}"] += stall - exposed
             job.settled = True
         self.in_flight.pop(job.job_id, None)
         return max(float(now_us), job.done_us)
@@ -172,7 +214,8 @@ class AsyncDMAEngine:
                 if j.done_us <= float(now_us)]
         for j in done:
             if not j.settled:
-                self.stats["hidden_us"] += j.transfer_us
+                self.stats[f"hidden_us{self._sfx(j.direction)}"] \
+                    += j.transfer_us
                 j.settled = True
             del self.in_flight[j.job_id]
         return sorted(done, key=lambda j: (j.done_us, j.job_id))
@@ -180,7 +223,8 @@ class AsyncDMAEngine:
     # ------------------------------------------------------------- queries
 
     def busy_until(self) -> float:
-        return max(self.channel_free)
+        return max(max(self.channel_free["in"]),
+                   max(self.channel_free["out"]))
 
 
 class StagingBuffer:
@@ -245,19 +289,46 @@ class Prefetcher:
 
     ``depth`` bounds how many preemption victims ahead of the resume
     queue are prefetched per step (the engine may resume several in one
-    admission round when capacity frees en masse).
+    admission round when capacity frees en masse).  Under SLO-aware
+    resume scheduling (DESIGN.md §8) the *effective* depth follows the
+    deadline pressure of the resume queue: :meth:`plan_depth` widens the
+    window to cover every candidate whose deadline slack is inside
+    ``urgency_us``, so urgent resumes have their pages staged before the
+    admission round that re-admits them.
     """
 
     def __init__(self, depth: int = 2):
         self.depth = depth
         self.in_flight: Dict[Key, DMAJob] = {}
         self.stats = {"issued_pages": 0, "hits": 0, "misses": 0,
-                      "wasted_pages": 0}
+                      "wasted_pages": 0, "planned_depth": depth,
+                      "max_planned_depth": depth}
+
+    # ------------------------------------------------------------- depth
+
+    def plan_depth(self, slacks: Sequence[Optional[float]],
+                   urgency_us: float) -> int:
+        """Deadline-weighted prefetch depth for this step.
+
+        ``slacks`` are the resume candidates' ``deadline − now`` in µs,
+        in resume order (``None`` = no deadline).  The planned depth is
+        the base ``depth`` widened to cover all candidates with slack ≤
+        ``urgency_us`` (deadline already blown counts as maximally
+        urgent), capped at the queue length.
+        """
+        urgent = sum(1 for s in slacks if s is not None and s <= urgency_us)
+        eff = max(self.depth, urgent)
+        if slacks:
+            eff = min(eff, len(slacks))
+        self.stats["planned_depth"] = eff
+        self.stats["max_planned_depth"] = max(
+            self.stats["max_planned_depth"], eff)
+        return eff
 
     # ------------------------------------------------------------- predict
 
     def predict(self, cache, host, active_seqs: Sequence[int],
-                resume_order: Sequence[int]
+                resume_order: Sequence[int], depth: Optional[int] = None
                 ) -> List[Tuple[Key, Optional[int]]]:
         """[(key, ppn-or-None)] the next step will touch but is not
         HBM-resident.
@@ -266,14 +337,15 @@ class Prefetcher:
           (the packed tables of step N+1 read all of them; this includes
           the next token-slot page).  These have physical targets, so
           their ``ppn`` rides along for contiguity costing.
-        * The next ``depth`` preempted requests in resume order: every
-          host-parked page (no physical target yet — the resume will
-          re-map them; transfers land in staging).
+        * The next ``depth`` preempted requests in resume order (the
+          caller passes :meth:`plan_depth`'s value when scheduling is
+          SLO-aware): every host-parked page (no physical target yet —
+          the resume will re-map them; transfers land in staging).
         """
         out: List[Tuple[Key, Optional[int]]] = []
         for seq, s, vpn, ppn in cache.host_backed_pages(active_seqs, host):
             out.append(((seq, s, vpn), ppn))
-        for rid in list(resume_order)[:self.depth]:
+        for rid in list(resume_order)[:self.depth if depth is None else depth]:
             for key in host.seq_pages(rid):
                 out.append((key, None))
         return out

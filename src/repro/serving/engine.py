@@ -33,6 +33,22 @@ blocking path; both modes produce byte-identical tokens because the
 prefetch machinery never alters allocation or scheduling, only when
 transfers are modeled to happen.
 
+Prefix-cache reuse (DESIGN.md §8): finished prompts park their full
+pages' KV in the :class:`~repro.serving.host_tier.PrefixIndex`, keyed by
+chained per-page content hash.  An admission whose prompt shares a
+cached page-aligned prefix skips decode for those tokens: the pages
+fault in from the host tier through the async DMA pipeline *at
+admission time* (merged DMAs — they were allocated en masse, so they are
+contiguous) and only the suffix is prefilled, its queries attending over
+the cached KV.  Tokens are byte-identical with the cache on or off
+(suffix prefill reproduces full prefill bitwise; dense-transformer
+families only).  The DMA timeline is full-duplex: preemption eviction
+gathers and prefix parking ride the channels' "out" lanes, visible in
+the per-direction stats without delaying inbound fault-ins.  Resume
+scheduling is SLO-aware: within a priority tier, preempted requests
+resume tightest-deadline-first and the deadline pressure widens the
+resume-prefetch window (``Prefetcher.plan_depth``).
+
 The engine is deliberately host-driven: page tables are packed on host per
 step (Mosaic's runtime half), while the device step (prefill/decode +
 pool writes) is a single jitted call (the hardware half).
@@ -55,7 +71,7 @@ from repro.core.demand_paging import LinkModel
 from repro.kernels import ops as kops
 from repro.models.lm import LM
 from repro.serving.dma import AsyncDMAEngine, Prefetcher, StagingBuffer
-from repro.serving.host_tier import HostPageStore
+from repro.serving.host_tier import HostPageStore, PrefixIndex
 from repro.serving.kv_cache import ShardedKVCache
 
 
@@ -66,6 +82,10 @@ class Request:
     prompt: np.ndarray           # int32 [T]
     max_new: int
     priority: int = 0            # higher = more important (preempt lowest)
+    # SLO deadline on the engine's modeled µs clock (DESIGN.md §8):
+    # among same-priority resume candidates, tighter slack resumes (and
+    # prefetches) first.  None = best-effort, FIFO within its tier.
+    deadline_us: Optional[float] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     preemptions: int = 0
@@ -94,6 +114,21 @@ class EngineStats:
     prefetch_hits: int = 0          # faults served from staging/in-flight
     prefetch_misses: int = 0        # demand faults the prefetcher missed
     prefetch_wasted: int = 0        # prefetched pages never consumed
+    # Full-duplex outbound DMA (DESIGN.md §8): eviction gathers + parking.
+    evict_pages: int = 0            # pages gathered device→host on channels
+    evict_dmas: int = 0             # outbound DMA descriptors
+    bytes_out: int = 0
+    evict_us: float = 0.0           # outbound transfer µs on the timeline
+    # Prefix-cache reuse (DESIGN.md §8).
+    prefix_hits: int = 0            # admissions that matched a cached prefix
+    prefix_misses: int = 0          # cache-enabled admissions with no match
+    prefix_reused_tokens: int = 0   # prompt tokens NOT re-prefilled
+    prefix_parked_pages: int = 0    # pages parked into the index
+    prefix_fault_us: float = 0.0    # modeled µs to fault reused prefixes in
+    admit_hits: int = 0             # admissions via the suffix-prefill path
+    admit_colds: int = 0            # admissions via the full-prefill path
+    admit_hit_us: float = 0.0       # wall µs spent in cache-hit admissions
+    admit_cold_us: float = 0.0      # wall µs spent in cold admissions
 
     @property
     def coalesced_mean(self) -> float:
@@ -103,6 +138,12 @@ class EngineStats:
     def occupancy_mean(self) -> float:
         return self.occupancy_sum / max(self.decode_steps, 1)
 
+    def admit_hit_mean_us(self) -> float:
+        return self.admit_hit_us / max(self.admit_hits, 1)
+
+    def admit_cold_mean_us(self) -> float:
+        return self.admit_cold_us / max(self.admit_colds, 1)
+
     def tok_per_s(self) -> float:
         # A zero-step engine (or mocked clock) must report 0, not explode.
         if self.wall_s <= 0.0:
@@ -110,8 +151,10 @@ class EngineStats:
         return (self.prefill_tokens + self.decode_tokens) / self.wall_s
 
     def summary(self) -> str:
-        """One-line human summary, incl. the exposed/hidden fault split."""
-        return (
+        """One-line human summary: throughput, the exposed/hidden fault
+        split, the prefetch hit/miss/wasted counts, duplex outbound
+        traffic and swap/prefix-reuse totals."""
+        line = (
             f"{self.tok_per_s():.1f} tok/s | "
             f"{self.prefill_tokens} prefill + {self.decode_tokens} decode "
             f"tok in {self.decode_steps} steps | "
@@ -119,7 +162,15 @@ class EngineStats:
             f"({self.bytes_in / 1024:.0f} KiB, "
             f"{self.fault_hidden_us:.0f}us hidden / "
             f"{self.fault_exposed_us:.0f}us exposed) | "
+            f"prefetch {self.prefetch_hits}/{self.prefetch_misses}/"
+            f"{self.prefetch_wasted} hit/miss/wasted | "
+            f"out {self.evict_pages} pages in {self.evict_dmas} DMAs "
+            f"({self.bytes_out / 1024:.0f} KiB) | "
             f"swaps {self.swaps_out}/{self.swaps_in}")
+        if self.prefix_hits or self.prefix_misses:
+            line += (f" | prefix {self.prefix_hits}/{self.prefix_misses} "
+                     f"hit/miss ({self.prefix_reused_tokens} tok reused)")
+        return line
 
 
 class ServingEngine:
@@ -130,12 +181,23 @@ class ServingEngine:
                  link: Optional[LinkModel] = None,
                  fault_mode: str = "async", dma_channels: int = 2,
                  prefetch_depth: int = 2, victim_policy: str = "cost",
-                 decode_window_us: Optional[float] = None):
+                 decode_window_us: Optional[float] = None,
+                 prefix_cache: bool = True,
+                 prefix_capacity_pages: int = 4096,
+                 duplex: bool = True,
+                 slo_urgency_us: float = 1000.0):
         assert fault_mode in ("async", "sync"), fault_mode
         assert victim_policy in ("cost", "priority"), victim_policy
         self.cfg = cfg
         self.fault_mode = fault_mode
         self.victim_policy = victim_policy
+        # Full-duplex outbound modeling (DESIGN.md §8): eviction gathers
+        # and prefix parking ride the DMA channels' "out" lanes.  Only
+        # the async pipeline has a channel timeline to ride.
+        self.duplex = duplex and fault_mode == "async"
+        # Deadline slack below which a resume candidate counts as urgent
+        # for SLO-aware prefetch-depth planning.
+        self.slo_urgency_us = slo_urgency_us
         # Modeled compute window per decode step for the DMA timeline.
         # None = measured decode wall time; on CPU that includes jit
         # compilation (seconds), which dwarfs the µs-scale transfers —
@@ -173,6 +235,16 @@ class ServingEngine:
                                     manager_kind, link=self.link,
                                     page_bytes=page_bytes)
         self.host = HostPageStore()
+        # Content-hash prefix cache (DESIGN.md §8).  Suffix-only prefill
+        # needs full-sequence attention over cached KV pages, which only
+        # the dense-transformer family supports bitwise (MoE capacity
+        # routing is batch-shape-dependent; ssm/hybrid carry recurrent
+        # state; encdec cross-attends; MLA caches latents).
+        self.prefix: Optional[PrefixIndex] = None
+        if prefix_cache and cfg.family == "dense" and cfg.mla is None \
+                and page_bytes:
+            self.prefix = PrefixIndex(self.host, geometry.page_tokens,
+                                      capacity_pages=prefix_capacity_pages)
         self.params = params if params is not None else self.lm.init(
             jax.random.PRNGKey(seed))
         shapes = self.lm.pool_shapes(per_shard * n_shards,
@@ -191,7 +263,8 @@ class ServingEngine:
         # double-buffered staging + next-step touch predictor.  The clock
         # is modeled µs: advanced by measured decode wall time (compute
         # the transfers hide behind) and by exposed fault stalls.
-        self.dma = AsyncDMAEngine(self.link, n_channels=dma_channels)
+        self.dma = AsyncDMAEngine(self.link, n_channels=dma_channels,
+                                  duplex=duplex)
         self.staging = StagingBuffer()
         self.prefetch = Prefetcher(depth=prefetch_depth)
         self._clock_us = 0.0
@@ -206,18 +279,22 @@ class ServingEngine:
 
     def _admit(self):
         # One admission order across resumes and new arrivals: highest
-        # priority first; within a tier, resumes beat arrivals (they are
-        # older and already hold host payloads + decode state), and both
-        # pools are FIFO (max() is stable).  This keeps a premium arrival
-        # from being head-of-line blocked behind an unadmittable
+        # priority first; within a tier, tightest SLO deadline first
+        # (deadline-free requests rank last and stay FIFO — max() is
+        # stable), and resumes beat arrivals (they are older and already
+        # hold host payloads + decode state).  This keeps a premium
+        # arrival from being head-of-line blocked behind an unadmittable
         # best-effort request — in either pool.
+        def rank(r: Request):
+            return (r.priority, -self._slack_or_inf(r))
+
         skipped: set = set()     # failed this round; don't block the rest
         while True:
             cand = max((r for r in self.preempted
                         if r.rid not in skipped),
-                       key=lambda r: r.priority, default=None)
+                       key=rank, default=None)
             queued = max((r for r in self.queue if r.rid not in skipped),
-                         key=lambda r: r.priority, default=None)
+                         key=rank, default=None)
             resume = cand is not None and (
                 queued is None or cand.priority >= queued.priority)
             if not resume:
@@ -313,6 +390,49 @@ class ServingEngine:
                 return False
             self._preempt(victim)
 
+    def _gather_pages(self, entries: List[Tuple[int, int, int]]
+                      ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Device→host gather of [(shard, vpn, ppn)] pool pages as one
+        batched launch; returns per-page (k_page, v_page) payloads."""
+        if not entries or self.pools is None:
+            return []
+        pps = self.cache.pages_per_shard
+        gidx = jnp.asarray([s * pps + ppn for s, _v, ppn in entries],
+                           jnp.int32)
+        k, v = self.pools
+        kp = jax.vmap(lambda pool: kops.page_gather(
+            pool, gidx, use_pallas=self.use_pallas))(k)
+        vp = jax.vmap(lambda pool: kops.page_gather(
+            pool, gidx, use_pallas=self.use_pallas))(v)
+        kp, vp = np.asarray(kp), np.asarray(vp)       # [L, n, ptok, kv, dh]
+        return [(kp[:, i], vp[:, i]) for i in range(len(entries))]
+
+    def _enqueue_outbound(self, keys: List[Tuple[int, int, int]],
+                          entries: List[Tuple[int, int, int]],
+                          payloads: List[Tuple[np.ndarray, np.ndarray]],
+                          kind: str) -> None:
+        """Account a device→host gather on the DMA channels' "out" lanes
+        (full-duplex, DESIGN.md §8).  The host copy is synchronous in the
+        model (write-back buffering), so the engine never stalls on these
+        jobs — they occupy the outbound timeline, contend with other
+        outbound traffic, and settle as hidden µs at the next drain."""
+        if not self.duplex or not entries:
+            return
+        by_shard: Dict[int, List[int]] = {}
+        for i, (s, _vpn, _ppn) in enumerate(entries):
+            by_shard.setdefault(s, []).append(i)
+        for s, idxs in sorted(by_shard.items()):
+            job = self.dma.enqueue(
+                [keys[i] for i in idxs],
+                [entries[i][2] for i in idxs],
+                self.cache.mgrs[s].residency.page_bytes,
+                [payloads[i] for i in idxs],
+                self._clock_us, kind=kind, direction="out")
+            self.stats.evict_pages += len(job.keys)
+            self.stats.evict_dmas += job.dma_count
+            self.stats.bytes_out += job.nbytes
+            self.stats.evict_us += job.transfer_us
+
     def _preempt(self, victim: Request) -> None:
         """Swap a request out: frames → host store at base-page granularity,
         decode state retained host-side, pages freed for other tenants."""
@@ -328,18 +448,14 @@ class ServingEngine:
             (s, vpn, ppn) for s, vpn, ppn in pages
             if self.cache.mgrs[s].residency.resident[ppn]
         ]
-        if resident and self.pools is not None:
-            pps = self.cache.pages_per_shard
-            gidx = jnp.asarray([s * pps + ppn for s, _v, ppn in resident],
-                               jnp.int32)
-            k, v = self.pools
-            kp = jax.vmap(lambda pool: kops.page_gather(
-                pool, gidx, use_pallas=self.use_pallas))(k)
-            vp = jax.vmap(lambda pool: kops.page_gather(
-                pool, gidx, use_pallas=self.use_pallas))(v)
-            kp, vp = np.asarray(kp), np.asarray(vp)   # [L, n, ptok, kv, dh]
-            for i, (s, vpn, _ppn) in enumerate(resident):
-                self.host.put(rid, s, vpn, kp[:, i], vp[:, i])
+        payloads = self._gather_pages(resident)
+        for (s, vpn, _ppn), (kp, vp) in zip(resident, payloads):
+            self.host.put(rid, s, vpn, kp, vp)
+        # The gather itself is outbound DMA traffic: it rides the
+        # channels' "out" lanes (hidden behind compute on a full-duplex
+        # link; contending with fault-ins when half-duplex).
+        self._enqueue_outbound([(rid, s, vpn) for s, vpn, _p in resident],
+                               resident, payloads, kind="evict")
         self.cache.evict_pages(resident)
         self._saved_tokens[rid] = self.cache.seq_tokens[rid]
         self.cache.free(rid)
@@ -550,6 +666,8 @@ class ServingEngine:
         previous decode into the staging front buffer (double-buffer
         swap; see StagingBuffer ownership rules)."""
         for job in self.dma.drain(self._clock_us):
+            if job.direction == "out":
+                continue    # outbound gathers: settled by drain, no staging
             self.prefetch.forget(job.keys)
             for key, payload in zip(job.keys, job.payloads):
                 if self.host.has(*key):
@@ -560,18 +678,38 @@ class ServingEngine:
         self.staging.swap()
         self.stats.fault_hidden_us = self.dma.stats["hidden_us"]
 
-    def _resume_order(self) -> List[int]:
+    def _slack(self, r: Request) -> Optional[float]:
+        """Deadline slack on the modeled clock (None = no deadline)."""
+        if r.deadline_us is None:
+            return None
+        return r.deadline_us - self._clock_us
+
+    def _slack_or_inf(self, r: Request) -> float:
+        s = self._slack(r)
+        return float("inf") if s is None else s
+
+    def _resume_candidates(self) -> List[Request]:
         """Resume candidates in the order _admit will consider them:
-        highest priority first, FIFO within a tier (stable sort)."""
-        return [r.rid for r in
-                sorted(self.preempted, key=lambda r: -r.priority)]
+        highest priority first; within a tier tightest deadline slack
+        first, deadline-free requests FIFO last (stable sort)."""
+        return sorted(self.preempted,
+                      key=lambda r: (-r.priority, self._slack_or_inf(r)))
+
+    def _resume_order(self) -> List[int]:
+        return [r.rid for r in self._resume_candidates()]
 
     def _issue_prefetch(self) -> None:
         """Step end (just before decode): issue the predicted next-step
-        touches to the DMA channels so they transfer while we compute."""
+        touches to the DMA channels so they transfer while we compute.
+        The resume-prefetch window is SLO-aware (DESIGN.md §8): the
+        deadline pressure of the resume queue widens ``Prefetcher.depth``
+        so urgent resumes have their pages staged in time."""
+        resume = self._resume_candidates()
+        depth = self.prefetch.plan_depth(
+            [self._slack(r) for r in resume], self.slo_urgency_us)
         preds = self.prefetch.predict(
             self.cache, self.host, [r.rid for r in self.active],
-            self._resume_order())
+            [r.rid for r in resume], depth=depth)
         by_shard: Dict[int, List[Tuple[Tuple[int, int, int], int]]] = {}
         by_seq: Dict[int, List[Tuple[int, int, int]]] = {}
         for key, ppn in preds:
@@ -599,15 +737,169 @@ class ServingEngine:
                 [self.host.peek(*k) for k in keys],
                 self._clock_us, kind="prefetch"))
         for job in jobs:
-            for key in job.keys:
-                self.prefetch.in_flight[key] = job
-            self.prefetch.stats["issued_pages"] += len(job.keys)
-            self.stats.fault_dmas += job.dma_count
-            self.stats.bytes_in += job.nbytes
-            self.stats.transfer_us += job.transfer_us
+            self._account_prefetch(job)
+
+    def _account_prefetch(self, job) -> None:
+        """Register an issued inbound prefetch job: in-flight tracking +
+        the engine-side transfer accounting (one site for both the
+        per-step predictor and admission-time prefix prefetches)."""
+        for key in job.keys:
+            self.prefetch.in_flight[key] = job
+        self.prefetch.stats["issued_pages"] += len(job.keys)
+        self.stats.fault_dmas += job.dma_count
+        self.stats.bytes_in += job.nbytes
+        self.stats.transfer_us += job.transfer_us
+
+    def _match_prefix(self, req: Request):
+        """Longest cached page-aligned prefix usable for this admission.
+
+        Capped one page short of the prompt when the whole prompt is
+        cached: the engine always prefills ≥ 1 real token, so the first
+        output token comes from live computation (byte-identical to the
+        cache-off run by construction — suffix prefill reproduces full
+        prefill bitwise; see tests/test_prefix_cache.py)."""
+        if self.prefix is None:
+            return None
+        ptok = self.geo.page_tokens
+        T = len(req.prompt)
+        n, pages = self.prefix.match(req.prompt)
+        n = min(n, (T - 1) // ptok)
+        if n <= 0:
+            self.stats.prefix_misses += 1
+            return None
+        self.stats.prefix_hits += 1
+        return pages[:n]
 
     def _prefill(self, req: Request):
-        """Run prefill for an already-allocated request (see _admit_one)."""
+        """Run prefill for an already-allocated request (see _admit_one):
+        suffix-only when a cached prefix matches, full otherwise."""
+        t0 = time.time()
+        match = self._match_prefix(req)
+        if match:
+            self._prefill_suffix(req, match)
+            self.stats.admit_hits += 1
+            self.stats.admit_hit_us += (time.time() - t0) * 1e6
+        else:
+            self._prefill_full(req)
+            self.stats.admit_colds += 1
+            self.stats.admit_cold_us += (time.time() - t0) * 1e6
+
+    def _prefill_suffix(self, req: Request, pages) -> None:
+        """Cache-hit admission (DESIGN.md §8): restore the matched prefix
+        pages through the host tier instead of recomputing them, and
+        forward only the suffix (queries attend over the cached KV).
+
+        The matched pages' payloads are (1) registered in the host store
+        under this request — the index's own copies stay, shared and
+        unpopped — (2) their freshly-allocated frames demoted to
+        non-resident, and (3) prefetched through the DMA pipeline *now*,
+        at admission, so the transfer overlaps whatever runs before the
+        first decode step touches them."""
+        ptok = self.geo.page_tokens
+        T = len(req.prompt)
+        P = len(pages) * ptok
+        self._run_compaction()
+        payloads = [self.prefix.payload(pg) for pg in pages]
+        locs = [(pg.shard, pg.vpn) for pg in pages]
+        for (s, vpn), (kp, vp) in zip(locs, payloads):
+            self.host.put(req.rid, s, vpn, kp, vp, kind="reuse")
+        entries = self.cache.demote_prefix_pages(req.rid, locs)
+        self.prefix.stats["reused_tokens"] += P
+        # [L, B=1, P, kv, dh] stacked prefix KV for the layer scan.
+        pk = np.stack([p[0] for p in payloads], axis=1)
+        pv = np.stack([p[1] for p in payloads], axis=1)
+        L = pk.shape[0]
+        pk = pk.reshape(L, 1, P, *pk.shape[3:])
+        pv = pv.reshape(L, 1, P, *pv.shape[3:])
+        Tpad = ((T + ptok - 1) // ptok) * ptok
+        tokens = np.full((1, Tpad - P), 0, np.int32)
+        tokens[0, :T - P] = req.prompt[P:]
+        ctx = self._ctx_global(self.cache.pack_ctx([req.rid], self.mpps))
+        logits, pools_new, state = self.lm.prefill(
+            self.params, {"tokens": jnp.asarray(tokens)},
+            self._pools_for([req.rid]), ctx,
+            last_pos=jnp.asarray([T - 1 - P], jnp.int32),
+            prefix_kv=(jnp.asarray(pk), jnp.asarray(pv)), prefix_len=P)
+        self._merge_pools([req.rid], pools_new)
+        self.states[req.rid] = state
+        req.out.append(int(jnp.argmax(logits[0])))
+        self.stats.prefill_tokens += T - P      # compute actually done
+        self.stats.prefix_reused_tokens += P
+        # Admission-time fault-in through the async pipeline: the first
+        # decode step that touches these pages finds them in flight (or
+        # already staged) instead of paying a cold demand fault.
+        if self.fault_mode == "async":
+            by_shard: Dict[int, List[int]] = {}
+            for i, (s, _vpn, _ppn) in enumerate(entries):
+                by_shard.setdefault(s, []).append(i)
+            for s, idxs in sorted(by_shard.items()):
+                job = self.dma.enqueue(
+                    [(req.rid, entries[i][0], entries[i][1]) for i in idxs],
+                    [entries[i][2] for i in idxs],
+                    self.cache.mgrs[s].residency.page_bytes,
+                    [payloads[i] for i in idxs],
+                    self._clock_us, kind="prefetch")
+                self._account_prefetch(job)
+                self.stats.prefix_fault_us += job.transfer_us
+
+    def _park_prefix(self, req: Request) -> None:
+        """Completion hook (DESIGN.md §8): park the finished request's
+        full prompt pages in the prefix index so future admissions
+        sharing the prefix fault them in instead of re-decoding.
+
+        Only the chain suffix the index is missing is parked (chained
+        hashes dedupe shared prefixes for free).  Payloads come from the
+        device pool (resident pages — one batched gather that rides the
+        outbound DMA lanes) or from the request's own host copies (pages
+        still swapped out); a page with neither truncates the chain,
+        keeping the index prefix-closed."""
+        if self.prefix is None or self.pools is None:
+            return
+        hashes = self.prefix.chain_hashes(req.prompt)
+        start = self.prefix.missing_from(hashes)
+        if start >= len(hashes):
+            return
+        # Pending compaction plans rewrote tables; land the copies before
+        # gathering through them (same rule as _preempt).
+        self._run_compaction()
+        rid = req.rid
+        to_park: List[Tuple[int, int, int, Optional[Tuple]]] = []
+        gather_entries: List[Tuple[int, int, int]] = []
+        for gp in range(start, len(hashes)):
+            s, vpn = self.cache.locate_page(gp)
+            mgr = self.cache.mgrs[s]
+            if rid not in mgr.tables or vpn >= len(mgr.tables[rid].ppn):
+                break
+            ppn = mgr.tables[rid].ppn[vpn]
+            if ppn >= 0 and mgr.residency.resident[ppn]:
+                gather_entries.append((s, vpn, ppn))
+                to_park.append((gp, s, vpn, None))
+            elif self.host.has(rid, s, vpn):
+                to_park.append((gp, s, vpn, self.host.peek(rid, s, vpn)))
+            else:
+                break
+        if not to_park:
+            return
+        gathered = self._gather_pages(gather_entries)
+        git = iter(gathered)
+        out_keys: List[Tuple[int, int, int]] = []
+        parent = hashes[start - 1] if start else None
+        for gp, s, vpn, payload in to_park:
+            from_device = payload is None
+            if from_device:
+                payload = next(git)
+            page = self.prefix.park(hashes[gp], parent, gp, s, vpn,
+                                    *payload)
+            if from_device:
+                out_keys.append((page.owner, s, vpn))
+            parent = hashes[gp]
+        self.stats.prefix_parked_pages += len(to_park)
+        # The device gather is outbound traffic on the duplex channels.
+        self._enqueue_outbound(out_keys, gather_entries, gathered,
+                               kind="park")
+
+    def _prefill_full(self, req: Request):
+        """Cold admission: full-prompt forward (PR 2's only path)."""
         ptok = self.geo.page_tokens
         T = len(req.prompt)
         Tpad = ((T + ptok - 1) // ptok) * ptok
@@ -761,6 +1053,9 @@ class ServingEngine:
                 r.done = True
                 done_now.append(r)
         for r in done_now:
+            # Park the finished prompt's pages in the prefix cache before
+            # the frames are freed / host copies dropped (DESIGN.md §8).
+            self._park_prefix(r)
             self.active.remove(r)
             self.cache.free(r.rid)
             self.states.pop(r.rid, None)

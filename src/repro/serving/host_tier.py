@@ -13,6 +13,17 @@ hands out — the fault-in path looks the payload up by who owns the page,
 scatters it to the page's *new* physical location, and drops the host copy
 (the device copy is authoritative once resident; decode appends write it).
 
+Two kinds of tenant share the store:
+
+* **Swapped requests** (``seq`` = a live request id ≥ 0): preemption parks
+  their resident pages; resume + fault-in pops them back.
+* **Cached prefixes** (``seq`` = a negative owner id minted by
+  :class:`PrefixIndex`): cold *shared* prompt prefixes keyed by chained
+  content hash (DESIGN.md §8).  These are read with :meth:`peek` —
+  never popped by fault-in — so any number of requests can reuse one
+  parked prefix, and ``drop_seq`` of a finished request (ids ≥ 0) can
+  never evict them; only the index's own LRU eviction does.
+
 The device⇄host movement itself is the engine's job
 (:func:`repro.kernels.ops.page_gather` / ``page_scatter``); this class is
 pure host-side bookkeeping and therefore trivially testable.
@@ -20,7 +31,9 @@ pure host-side bookkeeping and therefore trivially testable.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,7 +53,7 @@ class HostPageStore:
         self.stats = {
             "swapped_out_pages": 0, "swapped_in_pages": 0,
             "swap_out_requests": 0, "swap_in_requests": 0,
-            "peak_pages": 0,
+            "peak_pages": 0, "cached_pages": 0, "reused_pages": 0,
         }
 
     # ------------------------------------------------------------- queries
@@ -57,14 +70,29 @@ class HostPageStore:
     def nbytes(self) -> int:
         return sum(k.nbytes + v.nbytes for k, v in self._pages.values())
 
+    def request_pages(self) -> int:
+        """Pages owned by live requests (seq ≥ 0) — excludes cached
+        prefixes, which deliberately outlive their source requests."""
+        return sum(1 for k in self._pages if k[0] >= 0)
+
     # ------------------------------------------------------------- movement
 
     def put(self, seq: int, shard: int, vpn: int,
-            k_page: np.ndarray, v_page: np.ndarray) -> None:
-        """Park one evicted page's payload (device→host already gathered)."""
+            k_page: np.ndarray, v_page: np.ndarray, *,
+            kind: str = "swap") -> None:
+        """Park one page's payload (device→host already gathered).
+
+        ``kind="swap"`` counts toward the preemption traffic stats;
+        ``kind="prefix"`` is a :class:`PrefixIndex` insertion;
+        ``kind="reuse"`` a per-request copy of a cached prefix page
+        registered at cache-hit admission (host-side memcpy, no bus
+        traffic — the transfer is accounted by the admission prefetch)."""
+        assert kind in ("swap", "prefix", "reuse"), kind
         self._pages[(seq, shard, vpn)] = (np.asarray(k_page),
                                           np.asarray(v_page))
-        self.stats["swapped_out_pages"] += 1
+        key = {"swap": "swapped_out_pages", "prefix": "cached_pages",
+               "reuse": "reused_pages"}[kind]
+        self.stats[key] += 1
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        len(self._pages))
 
@@ -77,10 +105,15 @@ class HostPageStore:
 
     def peek(self, seq: int, shard: int, vpn: int
              ) -> Tuple[np.ndarray, np.ndarray]:
-        """Read a payload without dropping it (async prefetch staging:
-        the host copy stays authoritative until the page is actually
-        scattered into the pool, so a wrong prediction loses nothing)."""
+        """Read a payload without dropping it (async prefetch staging and
+        prefix-cache reads: the host copy stays authoritative until the
+        page is actually scattered into the pool, so a wrong prediction —
+        or a shared prefix reused by many requests — loses nothing)."""
         return self._pages[(seq, shard, vpn)]
+
+    def discard(self, seq: int, shard: int, vpn: int) -> bool:
+        """Drop one payload without transfer accounting (index eviction)."""
+        return self._pages.pop((seq, shard, vpn), None) is not None
 
     def note_swap_out(self) -> None:
         """One whole-request preemption (for the bench's swap counts)."""
@@ -91,8 +124,183 @@ class HostPageStore:
         self.stats["swap_in_requests"] += 1
 
     def drop_seq(self, seq: int) -> int:
-        """Discard a sequence's parked pages (request cancelled/finished)."""
+        """Discard a sequence's parked pages (request cancelled/finished).
+
+        Only touches keys owned by ``seq`` itself — prefix-cache pages
+        live under negative :class:`PrefixIndex` owner ids, so finishing
+        a request that *sourced* a cached prefix never evicts the cache.
+        """
         keys = [k for k in self._pages if k[0] == seq]
         for k in keys:
             del self._pages[k]
         return len(keys)
+
+
+# ---------------------------------------------------------------- prefixes
+
+
+@dataclasses.dataclass
+class PrefixPage:
+    """One cached prompt page: the payload key + chain bookkeeping."""
+
+    chain_hash: bytes               # H(parent_hash ‖ page tokens)
+    page_index: int                 # global page number within the prompt
+    owner: int                      # negative HostPageStore namespace
+    shard: int
+    vpn: int                        # local vpn in ``shard``
+    parent: Optional[bytes]
+    tick: int                       # LRU clock of the last lookup/insert
+    hits: int = 0
+
+
+class PrefixIndex:
+    """Content-hash index over cold shared prompt prefixes (DESIGN.md §8).
+
+    Prompts are hashed per *base page* with a chained hash — page ``i``'s
+    key is ``H(key[i-1] ‖ tokens[i·ptok:(i+1)·ptok])`` — so a key match
+    implies the **whole prefix up to and including that page** matches,
+    and divergent prompts share index entries exactly up to their common
+    page-aligned prefix.  Payloads (the pages' KV, bitwise as prefill
+    wrote them) live in the :class:`HostPageStore` under per-page negative
+    owner ids; the index maps hash → payload key.
+
+    Invariant: the set of cached hashes is *prefix-closed* — a page is
+    only inserted when its parent is present, and eviction removes a page
+    together with all of its descendants — so the longest cached prefix
+    of a prompt is found by walking its chain until the first miss.
+
+    Eviction is LRU over chains: lookups and insertions touch every page
+    of the matched chain with one tick, so a parent's tick is always ≥
+    its children's, and the least-recently-used *childless* page is the
+    tail of the stalest chain.  ``capacity_pages`` bounds host DRAM spent
+    on cold prefixes.
+    """
+
+    def __init__(self, store: HostPageStore, page_tokens: int,
+                 capacity_pages: int = 4096) -> None:
+        assert page_tokens >= 1 and capacity_pages >= 1
+        self.store = store
+        self.page_tokens = page_tokens
+        self.capacity_pages = capacity_pages
+        self._pages: Dict[bytes, PrefixPage] = {}
+        self._children: Dict[bytes, set] = {}
+        self._tick = 0
+        self._next_owner = -1
+        self.stats = {"lookups": 0, "hit_pages": 0, "parked_pages": 0,
+                      "evicted_pages": 0, "reused_tokens": 0}
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    # ------------------------------------------------------------- hashing
+
+    def chain_hashes(self, tokens: np.ndarray) -> List[bytes]:
+        """Chained content hash of every *full* page of ``tokens``."""
+        ptok = self.page_tokens
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+        out: List[bytes] = []
+        h = b"mosaic-prefix-v1"
+        for p in range(len(toks) // ptok):
+            page = toks[p * ptok:(p + 1) * ptok]
+            h = hashlib.blake2b(h + page.tobytes(), digest_size=16).digest()
+            out.append(h)
+        return out
+
+    # ------------------------------------------------------------- lookup
+
+    def match(self, tokens: np.ndarray) -> Tuple[int, List[PrefixPage]]:
+        """Longest cached page-aligned prefix of ``tokens``.
+
+        Returns ``(n_pages, pages)`` and touches the matched chain's LRU
+        tick.  ``n_pages`` may cover the whole prompt; callers that need
+        a non-empty suffix (the engine always prefills ≥ 1 real token)
+        cap it themselves.
+        """
+        self.stats["lookups"] += 1
+        self._tick += 1
+        pages: List[PrefixPage] = []
+        for h in self.chain_hashes(tokens):
+            page = self._pages.get(h)
+            if page is None:
+                break
+            page.tick = self._tick
+            page.hits += 1
+            pages.append(page)
+        self.stats["hit_pages"] += len(pages)
+        return len(pages), pages
+
+    def payload(self, page: PrefixPage) -> Tuple[np.ndarray, np.ndarray]:
+        return self.store.peek(page.owner, page.shard, page.vpn)
+
+    def missing_from(self, hashes: Sequence[bytes]) -> int:
+        """First index of ``hashes`` not cached (prefix-closure: every
+        later index is missing too) — the pages a parker must supply."""
+        for i, h in enumerate(hashes):
+            if h not in self._pages:
+                return i
+        return len(hashes)
+
+    # ------------------------------------------------------------- insert
+
+    def park(self, chain_hash: bytes, parent: Optional[bytes],
+             page_index: int, shard: int, vpn: int,
+             k_page: np.ndarray, v_page: np.ndarray) -> PrefixPage:
+        """Insert one page (its chain prefix must already be cached)."""
+        assert parent is None or parent in self._pages, \
+            "prefix chains must be parked root-first"
+        if chain_hash in self._pages:           # concurrent duplicate park
+            return self._pages[chain_hash]
+        # Never evict the chain being extended (tiny-capacity edge: the
+        # freshly-parked parent is childless until this insert lands).
+        protect = set()
+        anc = parent
+        while anc is not None:
+            protect.add(anc)
+            anc = self._pages[anc].parent
+        self._evict_to(self.capacity_pages - 1, protect=frozenset(protect))
+        self._tick += 1
+        page = PrefixPage(chain_hash=chain_hash, page_index=page_index,
+                          owner=self._next_owner, shard=shard, vpn=vpn,
+                          parent=parent, tick=self._tick)
+        self._next_owner -= 1
+        self._pages[chain_hash] = page
+        if parent is not None:
+            self._children.setdefault(parent, set()).add(chain_hash)
+        self.store.put(page.owner, shard, vpn, k_page, v_page,
+                       kind="prefix")
+        self.stats["parked_pages"] += 1
+        return page
+
+    # ------------------------------------------------------------- evict
+
+    def _evict_to(self, capacity: int,
+                  protect: frozenset = frozenset()) -> None:
+        """LRU-evict childless pages until ≤ ``capacity`` remain
+        (``protect``: hashes exempt — the chain an insert is extending)."""
+        while len(self._pages) > capacity:
+            victim = min(
+                (p for p in self._pages.values()
+                 if not self._children.get(p.chain_hash)
+                 and p.chain_hash not in protect),
+                key=lambda p: (p.tick, p.page_index), default=None)
+            if victim is None:      # only protected chains remain
+                break
+            self._evict_page(victim)
+
+    def _evict_page(self, page: PrefixPage) -> None:
+        # Descendants first (recursion keeps the prefix-closure invariant
+        # even if called on an inner page directly).
+        for child in list(self._children.get(page.chain_hash, ())):
+            if child in self._pages:
+                self._evict_page(self._pages[child])
+        self._children.pop(page.chain_hash, None)
+        if page.parent is not None and page.parent in self._children:
+            self._children[page.parent].discard(page.chain_hash)
+        del self._pages[page.chain_hash]
+        self.store.discard(page.owner, page.shard, page.vpn)
+        self.stats["evicted_pages"] += 1
+
+    def drop_all(self) -> int:
+        n = len(self._pages)
+        self._evict_to(0)
+        return n

@@ -1,0 +1,387 @@
+"""Content-hash prefix cache + full-duplex DMA + SLO resume (DESIGN.md §8).
+
+Covers the chained-hash PrefixIndex (match/dedup/prefix-closed LRU
+eviction), the HostPageStore.drop_seq ↔ cached-prefix interaction, the
+bitwise equivalence of suffix-only prefill with full prefill, engine-level
+byte-identity with the cache on vs off (both fault modes), the duplex
+per-direction timeline invariants, SLO deadline-weighted resume ordering
+driving the prefetch depth, and the EngineStats.summary() counters.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.core.demand_paging import LinkModel
+from repro.models.lm import LM
+from repro.models.transformer import PageCtx
+from repro.serving.dma import AsyncDMAEngine, Prefetcher
+from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.host_tier import HostPageStore, PrefixIndex
+
+GEO = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
+PTOK = GEO.page_tokens
+
+
+def _payload(tag: float = 0.0):
+    return (np.full((1, PTOK, 1, 4), tag, np.float32),
+            np.full((1, PTOK, 1, 4), -tag, np.float32))
+
+
+# ------------------------------------------------------------ PrefixIndex
+
+
+def test_chain_hashes_prefix_property():
+    idx = PrefixIndex(HostPageStore(), PTOK)
+    a = np.arange(4 * PTOK, dtype=np.int32)
+    b = a.copy()
+    b[2 * PTOK] += 1                        # diverge in page 2
+    ha, hb = idx.chain_hashes(a), idx.chain_hashes(b)
+    assert len(ha) == 4
+    assert ha[:2] == hb[:2]                 # shared prefix, shared hashes
+    assert ha[2] != hb[2]
+    assert ha[3] != hb[3]                   # chained: divergence propagates
+    # Partial tail pages never hash.
+    assert len(idx.chain_hashes(a[:3 * PTOK + 2])) == 3
+
+
+def test_index_match_and_dedup():
+    store = HostPageStore()
+    idx = PrefixIndex(store, PTOK)
+    toks = np.arange(3 * PTOK, dtype=np.int32)
+    hs = idx.chain_hashes(toks)
+    parent = None
+    for i, h in enumerate(hs):
+        idx.park(h, parent, i, 0, i, *_payload(i))
+        parent = h
+    assert len(idx) == 3
+    n, pages = idx.match(toks)
+    assert n == 3 and [p.page_index for p in pages] == [0, 1, 2]
+    # A prompt diverging after page 1 matches exactly 2 pages.
+    div = toks.copy()
+    div[2 * PTOK] += 7
+    n, _ = idx.match(div)
+    assert n == 2
+    # Re-parking an existing chain is a no-op (dedup by content hash).
+    assert idx.missing_from(hs) == 3
+    before = store.stats["cached_pages"]
+    idx.park(hs[0], None, 0, 0, 0, *_payload())
+    assert len(idx) == 3 and store.stats["cached_pages"] == before
+
+
+def test_index_lru_eviction_is_prefix_closed():
+    store = HostPageStore()
+    idx = PrefixIndex(store, PTOK, capacity_pages=4)
+    a = np.arange(2 * PTOK, dtype=np.int32)
+    b = 1000 + np.arange(2 * PTOK, dtype=np.int32)
+    for toks in (a, b):
+        hs = idx.chain_hashes(toks)
+        parent = None
+        for i, h in enumerate(hs):
+            idx.park(h, parent, i, 0, i, *_payload())
+            parent = h
+    assert len(idx) == 4
+    idx.match(b)                            # a is now the LRU chain
+    c = 2000 + np.arange(2 * PTOK, dtype=np.int32)
+    hc = idx.chain_hashes(c)
+    idx.park(hc[0], None, 0, 0, 0, *_payload())
+    # Chain a lost (at least) its tail; chain b is untouched; the index
+    # stays prefix-closed: every cached page's parent is cached too.
+    assert idx.match(b)[0] == 2
+    for page in idx._pages.values():
+        assert page.parent is None or page.parent in idx._pages
+    assert len(idx) <= 4
+    # Evicted payloads left the store.
+    assert store.stats["cached_pages"] - idx.stats["evicted_pages"] \
+        == len(idx)
+
+
+def test_drop_seq_never_evicts_cached_prefix_pages():
+    """Satellite: finishing (dropping) a request must not evict prefix
+    pages still referenced by the index — reuse copies live under the
+    request id, the index's originals under negative owner ids."""
+    store = HostPageStore()
+    idx = PrefixIndex(store, PTOK)
+    toks = np.arange(2 * PTOK, dtype=np.int32)
+    hs = idx.chain_hashes(toks)
+    parent = None
+    for i, h in enumerate(hs):
+        idx.park(h, parent, i, 0, i, *_payload(i))
+        parent = h
+    # A request reusing the prefix registers per-request copies.
+    n, pages = idx.match(toks)
+    for pg in pages:
+        k, v = idx.payload(pg)
+        store.put(7, pg.shard, pg.vpn, k, v, kind="reuse")
+    assert store.has(7, 0, 0) and store.has(7, 0, 1)
+    dropped = store.drop_seq(7)
+    assert dropped == 2
+    # The index's pages survive, payloads intact and still matchable.
+    assert len(idx) == 2
+    n, pages = idx.match(toks)
+    assert n == 2
+    k, _v = idx.payload(pages[1])
+    assert float(k[0, 0, 0, 0]) == 1.0
+
+
+# ------------------------------------------------- suffix prefill (model)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_smoke_config("qwen2.5-3b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def _ctx(total_tokens, mpps=16):
+    pages = (total_tokens + PTOK - 1) // PTOK
+    tables = np.full((1, 1, mpps), -1, np.int32)
+    ntok = np.zeros((1, 1, mpps), np.int32)
+    for i in range(pages):
+        tables[0, 0, i] = i
+        ntok[0, 0, i] = min(PTOK, total_tokens - i * PTOK)
+    wpage = np.asarray([[(total_tokens - 1) // PTOK]], np.int32)
+    wslot = np.asarray([(total_tokens - 1) % PTOK], np.int32)
+    return PageCtx(tables=jnp.asarray(tables), ntok=jnp.asarray(ntok),
+                   wpage=jnp.asarray(wpage), wslot=jnp.asarray(wslot),
+                   frame_pages=GEO.frame_pages)
+
+
+def test_suffix_prefill_bitwise_matches_full_prefill(lm_setup):
+    """The correctness anchor of prefix reuse: prefilling only the suffix
+    against cached prefix KV reproduces the full prefill's last-token
+    logits AND pool pages bitwise — even when the cached KV came from a
+    prompt of a *different* padded length."""
+    cfg, lm, params = lm_setup
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PTOK).astype(np.int32)
+    sufA = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+    sufB = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+    def pools():
+        shapes = lm.pool_shapes(64, PTOK)
+        return tuple(jnp.zeros(s.shape, s.dtype) for s in shapes)
+
+    def full(prompt):
+        T = len(prompt)
+        Tpad = ((T + PTOK - 1) // PTOK) * PTOK
+        toks = np.zeros((1, Tpad), np.int32)
+        toks[0, :T] = prompt
+        return lm.prefill(params, {"tokens": jnp.asarray(toks)}, pools(),
+                          _ctx(T + 1),
+                          last_pos=jnp.asarray([T - 1], jnp.int32))
+
+    # Prime: prompt A writes the prefix pages (padded length 40).
+    _, poolsA, _ = full(np.concatenate([prefix, sufA]))
+    kA, vA = poolsA
+    P = 2 * PTOK
+    pk = kA[:, :2].reshape(kA.shape[0], 1, P, *kA.shape[3:])
+    pv = vA[:, :2].reshape(vA.shape[0], 1, P, *vA.shape[3:])
+
+    # Reference: cold full prefill of prompt B (padded length 32).
+    promptB = np.concatenate([prefix, sufB])
+    TB = len(promptB)
+    logits_ref, pools_ref, _ = full(promptB)
+
+    # Warm: suffix-only prefill; prefix pages pre-scattered (what the
+    # host-tier fault-in does), queries attend over the cached KV.
+    TpadB = ((TB + PTOK - 1) // PTOK) * PTOK
+    toks = np.zeros((1, TpadB - P), np.int32)
+    toks[0, :TB - P] = promptB[P:]
+    k0, v0 = pools()
+    k0 = k0.at[:, :2].set(kA[:, :2])
+    v0 = v0.at[:, :2].set(vA[:, :2])
+    logits_warm, pools_warm, _ = lm.prefill(
+        params, {"tokens": jnp.asarray(toks)}, (k0, v0), _ctx(TB + 1),
+        last_pos=jnp.asarray([TB - 1 - P], jnp.int32),
+        prefix_kv=(pk, pv), prefix_len=P)
+
+    assert bool(jnp.all(logits_ref == logits_warm))
+    npages = (TB + PTOK - 1) // PTOK
+    for ref, warm in zip(pools_ref, pools_warm):
+        assert bool(jnp.all(ref[:, :npages] == warm[:, :npages]))
+
+
+# ------------------------------------------------------- engine end-to-end
+
+
+def _shared_prefix_requests(cfg, n, shared_tokens=40, suffix_tokens=8,
+                            max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_tokens).astype(np.int32)
+    return [Request(rid=i, tenant=i % 3,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size,
+                                              suffix_tokens)
+                         .astype(np.int32)]),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _run_waves(prefix_cache, fault_mode="async", n=5):
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=4, max_seq=128,
+                        manager_kind="mosaic", seed=0,
+                        prefix_cache=prefix_cache, fault_mode=fault_mode,
+                        decode_window_us=1000.0)
+    reqs = _shared_prefix_requests(cfg, n)
+    for r in reqs[:2]:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=300)
+    for r in reqs[2:]:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=600)
+    assert all(r.done for r in reqs)
+    eng.cache.check_invariants()
+    return eng, {r.rid: tuple(r.out) for r in reqs}
+
+
+@pytest.fixture(scope="module")
+def warm_runs():
+    on_async = _run_waves(True, "async")
+    off_async = _run_waves(False, "async")
+    return on_async, off_async
+
+
+def test_prefix_cache_tokens_byte_identical(warm_runs):
+    (eng_on, outs_on), (eng_off, outs_off) = warm_runs
+    assert outs_on == outs_off
+    assert eng_on.stats.prefix_hits >= 3
+    assert eng_on.stats.prefix_reused_tokens >= 3 * 40
+    assert eng_off.stats.prefix_hits == 0
+
+
+def test_prefix_cache_skips_prefill_compute(warm_runs):
+    (eng_on, _), (eng_off, _) = warm_runs
+    s_on, s_off = eng_on.stats, eng_off.stats
+    assert s_on.prefill_tokens \
+        == s_off.prefill_tokens - s_on.prefix_reused_tokens
+    # The reused pages arrived through the DMA pipeline, not recompute:
+    # every one was faulted in (admission prefetch → hit, or demand).
+    assert s_on.faults >= s_on.prefix_reused_tokens // PTOK
+    assert s_on.prefetch_hits + s_on.prefetch_misses >= \
+        s_on.prefix_reused_tokens // PTOK
+
+
+def test_prefix_cache_sync_mode_identical(warm_runs):
+    (_, outs_ref), _ = warm_runs
+    _, outs_sync_on = _run_waves(True, "sync")
+    assert outs_sync_on == outs_ref
+
+
+def test_drop_seq_engine_keeps_cache_warm(warm_runs):
+    """After all requests (including cache-hit ones) finished and were
+    dropped, the index still holds the shared prefix and its payloads."""
+    (eng_on, _), _ = warm_runs
+    assert eng_on.prefix is not None and len(eng_on.prefix) >= 5
+    # Index-owned payloads (negative owners) survived every drop_seq.
+    owners = {k[0] for k in eng_on.host._pages}
+    assert owners and all(o < 0 for o in owners)
+
+
+def test_parking_rides_outbound_lanes(warm_runs):
+    (eng_on, _), _ = warm_runs
+    s, d = eng_on.stats, eng_on.dma.stats
+    assert s.prefix_parked_pages > 0
+    assert s.evict_pages > 0 and s.bytes_out > 0      # park gathers
+    assert d["park_jobs"] > 0
+    # Per-direction split invariants (settled at run_until_drained).
+    assert d["hidden_us"] + d["exposed_us"] \
+        == pytest.approx(d["transfer_us"])
+    assert d["hidden_us_out"] + d["exposed_us_out"] \
+        == pytest.approx(d["transfer_us_out"])
+    # Outbound traffic never counts into the fault (inbound) split.
+    assert s.fault_hidden_us <= d["transfer_us"] + 1e-9
+
+
+# ------------------------------------------------------------ duplex DMA
+
+
+def test_duplex_directions_do_not_contend():
+    link = LinkModel(setup_us=10.0, bandwidth_GBps=10.0)
+    dma = AsyncDMAEngine(link, n_channels=1, duplex=True)
+    jin = dma.enqueue([(0, 0, 0)], [4], 1000, [_payload()], 0.0,
+                      kind="demand", direction="in")
+    jout = dma.enqueue([(1, 0, 0)], [9], 1000, [_payload()], 0.0,
+                       kind="evict", direction="out")
+    assert jin.start_us == 0.0 and jout.start_us == 0.0   # full duplex
+    dma.wait(jin, 0.0)
+    dma.drain(jout.done_us + 1.0)
+    assert dma.stats["exposed_us"] == pytest.approx(jin.transfer_us)
+    assert dma.stats["hidden_us_out"] == pytest.approx(jout.transfer_us)
+    assert dma.stats["evict_jobs"] == 1
+
+
+def test_half_duplex_serializes_directions():
+    link = LinkModel(setup_us=10.0, bandwidth_GBps=10.0)
+    dma = AsyncDMAEngine(link, n_channels=1, duplex=False)
+    jout = dma.enqueue([(1, 0, 0)], [9], 1000, [_payload()], 0.0,
+                       kind="evict", direction="out")
+    jin = dma.enqueue([(0, 0, 0)], [4], 1000, [_payload()], 0.0,
+                      kind="demand", direction="in")
+    # The fault queues behind the eviction on the shared lane.
+    assert jin.start_us == pytest.approx(jout.done_us)
+    now = dma.wait(jin, 0.0)
+    assert now == pytest.approx(jin.done_us)
+    assert dma.stats["queue_us"] > 0.0
+
+
+# ---------------------------------------------------------- SLO schedule
+
+
+def test_slo_resume_order_and_prefetch_depth():
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                        manager_kind="mosaic", seed=0,
+                        prefetch_depth=1, slo_urgency_us=500.0)
+    eng._clock_us = 1000.0
+    mk = lambda rid, pri, dl: Request(rid=rid, tenant=0,
+                                      prompt=np.zeros(8, np.int32),
+                                      max_new=4, priority=pri,
+                                      deadline_us=dl)
+    eng.preempted.extend([
+        mk(0, 0, None),          # best-effort, FIFO
+        mk(1, 0, 1200.0),        # slack 200 (urgent)
+        mk(2, 1, None),          # premium, no deadline
+        mk(3, 0, 5000.0),        # slack 4000
+        mk(4, 1, 1100.0),        # premium, slack 100 (most urgent)
+    ])
+    # Priority first; tightest slack within a tier; deadline-free last.
+    assert eng._resume_order() == [4, 2, 1, 3, 0]
+    slacks = [eng._slack(r) for r in eng._resume_candidates()]
+    depth = eng.prefetch.plan_depth(slacks, eng.slo_urgency_us)
+    assert depth == 2                       # two urgent beat base depth 1
+    # Blown deadlines count as maximally urgent.
+    eng._clock_us = 10_000.0
+    slacks = [eng._slack(r) for r in eng._resume_candidates()]
+    assert eng.prefetch.plan_depth(slacks, eng.slo_urgency_us) == 3
+    # No deadlines -> base depth unchanged.
+    pf = Prefetcher(depth=2)
+    assert pf.plan_depth([None, None, None], 500.0) == 2
+    assert pf.plan_depth([], 500.0) == 2
+
+
+# ------------------------------------------------------------- summaries
+
+
+def test_engine_stats_summary_reports_prefetch_and_prefix_counts():
+    """Satellite: summary() must include the prefetch hit/miss/wasted
+    split (and the duplex/prefix counters when active)."""
+    s = EngineStats(prefill_tokens=10, decode_tokens=5, decode_steps=5,
+                    wall_s=1.0, faults=3, fault_dmas=2, bytes_in=4096,
+                    prefetch_hits=7, prefetch_misses=2, prefetch_wasted=1,
+                    evict_pages=4, evict_dmas=2, bytes_out=8192,
+                    prefix_hits=3, prefix_misses=1,
+                    prefix_reused_tokens=40)
+    line = s.summary()
+    assert "prefetch 7/2/1 hit/miss/wasted" in line
+    assert "out 4 pages in 2 DMAs" in line
+    assert "prefix 3/1 hit/miss (40 tok reused)" in line
+    # Prefix-less engines keep the line clean.
+    assert "prefix" not in EngineStats().summary()
