@@ -14,6 +14,7 @@ Suites:
   oversub  2x-oversubscribed host-tier paging + swap cycle (paper §1/§4.2)
   overlap  sync vs async double-buffered fault-in + link contention (§7)
   prefix-reuse  content-hash prefix cache + full-duplex DMA (§8)
+  cluster  shared host tier + deadline router + migration (§10)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -135,6 +136,12 @@ def main(argv=None):
             + serving_bench.duplex_compare(
                 n_requests=8 if args.fast else 10)
             + serving_bench.duplex_sim_compare(n_access=n // 2)),
+        "cluster": lambda: (
+            serving_bench.cluster_prefix_share_compare(
+                n_requests=6 if args.fast else 8)
+            + serving_bench.cluster_router_compare()
+            + serving_bench.cluster_migration_compare()
+            + serving_bench.cluster_sim_compare(n_access=n // 2)),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

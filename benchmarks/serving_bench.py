@@ -44,6 +44,28 @@ Host-tier scenarios (DESIGN.md §6):
 * ``duplex_sim_compare`` — the TLB simulator under an HBM capacity cap:
   capacity writebacks ride the link; a full-duplex link keeps them off
   the fault path, half-duplex queues faults behind them.
+
+Cluster tier (DESIGN.md §10):
+
+* ``cluster_prefix_share_compare`` — one process-wide ``PrefixIndex``
+  over the shared host tier vs per-engine indexes: a prefix parked by
+  replica 0 is a cache hit on replica 1 only when the index is shared,
+  so the shared configuration achieves a strictly higher hit rate on a
+  shared-prefix workload (tokens byte-identical either way).
+* ``cluster_router_compare`` — deadline-aware (slack-ordered) dispatch
+  vs FIFO round-robin on an unevenly loaded cluster: SLO attainment is
+  higher when the router sends tight-deadline requests to the idle
+  replica instead of queueing them behind long best-effort work.
+* ``cluster_migration_compare`` — work-stealing migration of a preempted
+  request to an idle replica: the destination decodes it with **zero
+  re-prefill** (only its host-resident base pages change hands, via
+  frame-lease re-assignment + fault-in over the destination's own DMA
+  lanes), and tokens are byte-identical across 1-engine, N-engine, and
+  N-engine-with-migration runs.
+* ``cluster_sim_compare`` — the TLB simulator's cluster model:
+  per-engine links remove cross-engine link contention, the shared host
+  store re-serializes transfers on its DRAM lanes, and widening
+  ``host_lanes`` relieves it.
 """
 
 from __future__ import annotations
@@ -516,4 +538,261 @@ def duplex_sim_compare(n_access: int = 2000,
                  "claim_duplex_cuts_fault_contention":
                      bool(writebacks > 0
                           and contention[True] < contention[False])})
+    return rows
+
+
+# ------------------------------------------------------------ cluster tier
+
+
+def _shared_prefix_reqs(cfg, n, shared_tokens=40, suffix_tokens=8,
+                        max_new=4, seed=0, **req_kw):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_tokens).astype(np.int32)
+    return [Request(rid=i, tenant=i % 3,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size,
+                                              suffix_tokens)
+                         .astype(np.int32)]),
+                    max_new=max_new, **req_kw)
+            for i in range(n)]
+
+
+def run_cluster_prefix(share_prefix: bool, *, n_engines: int = 2,
+                       n_requests: int = 8):
+    """Two-wave shared-prefix workload over the cluster: wave 1 (one
+    request, pinned to replica 0) parks the prefix; wave 2 is
+    load-balanced over all replicas — only a *shared* index lets the
+    replicas that never saw wave 1 hit."""
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
+                             max_batch=4, max_seq=128, seed=0,
+                             share_prefix=share_prefix,
+                             decode_window_us=1000.0)
+    reqs = _shared_prefix_reqs(cfg, n_requests)
+    cluster.submit(reqs[0], engine=0)
+    cluster.run_until_drained(max_steps=500)
+    for r in reqs[1:]:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=1000)
+    assert all(r.done for r in reqs), "cluster prefix workload not drained"
+    cluster.check_invariants()
+    return cluster, reqs
+
+
+def cluster_prefix_share_compare(n_requests: int = 8) -> List[Dict]:
+    rows = []
+    outs, rates = {}, {}
+    for mode, share in (("shared-index", True), ("per-engine", False)):
+        cluster, reqs = run_cluster_prefix(share, n_requests=n_requests)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        cs = cluster.stats()
+        t = cs.totals
+        rates[mode] = cs.prefix_hit_rate()
+        rows.append({
+            "bench": "cluster-prefix", "mode": mode,
+            "engines": len(cluster.engines),
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "prefix_hits": t.prefix_hits,
+            "prefix_misses": t.prefix_misses,
+            "hit_rate": round(rates[mode], 3),
+            "reused_tokens": t.prefix_reused_tokens,
+            "parked_pages": t.prefix_parked_pages,
+            "prefill_tokens": t.prefill_tokens,
+            "host_frames_peak": cluster.tier.frames.stats["peak_frames"],
+        })
+    identical = outs["shared-index"] == outs["per-engine"]
+    rows.append({"bench": "cluster-prefix", "mode": "CLAIM",
+                 "claim_cluster_shared_index_higher_hit_rate":
+                     bool(rates["shared-index"] > rates["per-engine"]),
+                 "claim_cluster_prefix_tokens_identical": identical})
+    assert identical, "prefix-index sharing changed model outputs!"
+    return rows
+
+
+def run_cluster_slo(policy: str, *, n_engines: int = 2):
+    """Unevenly loaded cluster: replica 0 starts busy with long
+    best-effort work; a burst of tight-deadline requests then arrives.
+    Slack-ordered dispatch sends the burst to the idle replica; FIFO
+    round-robin queues half of it behind the long work."""
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
+                             max_batch=2, max_seq=128, seed=0,
+                             router_policy=policy, migrate=False,
+                             decode_window_us=1000.0)
+    rng = np.random.default_rng(0)
+    long_reqs = [Request(rid=i, tenant=0,
+                         prompt=rng.integers(0, cfg.vocab_size, 32)
+                         .astype(np.int32), max_new=24)
+                 for i in range(4)]
+    for r in long_reqs:
+        cluster.submit(r, engine=0)
+    for _ in range(2):
+        cluster.step()
+    burst = [Request(rid=100 + i, tenant=1,
+                     prompt=rng.integers(0, cfg.vocab_size, 24)
+                     .astype(np.int32), max_new=6,
+                     deadline_us=18_000.0)
+             for i in range(4)]
+    for r in burst:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=1000)
+    assert all(r.done for r in long_reqs + burst)
+    cluster.check_invariants()
+    return cluster, long_reqs + burst
+
+
+def cluster_router_compare() -> List[Dict]:
+    rows = []
+    outs, att = {}, {}
+    for policy in ("slack", "fifo"):
+        cluster, reqs = run_cluster_slo(policy)
+        outs[policy] = {r.rid: tuple(r.out) for r in reqs}
+        cs = cluster.stats()
+        t = cs.totals
+        att[policy] = cs.slo_attainment()
+        rows.append({
+            "bench": "cluster-router", "mode": policy,
+            "engines": len(cluster.engines),
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "deadline_hits": sum(t.deadline_hits.values()),
+            "deadline_misses": sum(t.deadline_misses.values()),
+            "slo_attainment": round(att[policy], 3),
+            "dispatched": "/".join(
+                str(cluster.router.stats.dispatched.get(i, 0))
+                for i in range(len(cluster.engines))),
+        })
+    identical = outs["slack"] == outs["fifo"]
+    rows.append({"bench": "cluster-router", "mode": "CLAIM",
+                 "claim_cluster_router_raises_slo_attainment":
+                     bool(att["slack"] > att["fifo"]),
+                 "claim_cluster_router_tokens_identical": identical})
+    assert identical, "router policy changed model outputs!"
+    return rows
+
+
+def run_cluster_migration(n_engines: int, migrate: bool):
+    """Controlled steal scenario: a long best-effort request on replica 0
+    is displaced by a premium burst; with migration on, the idle replica
+    adopts it via host-frame handoff instead of leaving it parked."""
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
+                             max_batch=2, max_seq=96, seed=0,
+                             migrate=migrate, prefix_cache=False,
+                             decode_window_us=1000.0)
+    rng = np.random.default_rng(2)
+    victim = Request(rid=0, tenant=0, priority=0,
+                     prompt=rng.integers(0, cfg.vocab_size, 40)
+                     .astype(np.int32), max_new=20)
+    premium = [Request(rid=i, tenant=1, priority=2,
+                       prompt=rng.integers(0, cfg.vocab_size, 48)
+                       .astype(np.int32), max_new=12)
+               for i in range(1, 3)]
+    cluster.submit(victim, engine=0)
+    for _ in range(2):
+        cluster.step()
+    for r in premium:
+        cluster.submit(r, engine=0)
+    cluster.run_until_drained(max_steps=800)
+    assert all(r.done for r in [victim] + premium)
+    cluster.check_invariants()
+    return cluster, [victim] + premium
+
+
+def cluster_migration_compare() -> List[Dict]:
+    rows = []
+    outs = {}
+    clusters = {}
+    for mode, n_eng, migrate in (("1-engine", 1, False),
+                                 ("2-engines", 2, False),
+                                 ("2-engines-steal", 2, True)):
+        cluster, reqs = run_cluster_migration(n_eng, migrate)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        clusters[mode] = cluster
+        t = cluster.stats().totals
+        r = cluster.router.stats
+        rows.append({
+            "bench": "cluster-migration", "mode": mode,
+            "engines": n_eng,
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "prefill_tokens": t.prefill_tokens,
+            "decode_tokens": t.decode_tokens,
+            "migrations": r.migrations,
+            "migrated_pages": r.migrated_pages,
+            "whole_frame_moves":
+                cluster.tier.frames.stats["whole_frame_moves"],
+            "swaps_out": t.swaps_out, "swaps_in": t.swaps_in,
+            "transfer_us": round(t.transfer_us, 1),
+        })
+    steal = clusters["2-engines-steal"]
+    dst = steal.engines[1]
+    r = steal.router.stats
+    identical = (outs["1-engine"] == outs["2-engines"]
+                 == outs["2-engines-steal"])
+    # Zero re-prefill: the thief decoded the migrated request without
+    # ever prefilling (its pages arrived as host-resident base pages),
+    # and cluster-wide prefill compute is unchanged by migration.
+    zero_reprefill = (r.migrations >= 1 and r.migrated_pages > 0
+                      and dst.stats.prefill_tokens == 0
+                      and dst.stats.decode_tokens > 0
+                      and dst.stats.faults >= r.migrated_pages
+                      and clusters["2-engines-steal"].stats().totals
+                          .prefill_tokens
+                      == clusters["2-engines"].stats().totals
+                          .prefill_tokens)
+    # Handoff cost: restoring the migrated pages on the thief is modeled
+    # DMA µs; re-prefilling the prompt would cost ≥ one decode window
+    # per migration (deliberately loose floor, cf. prefix_reuse_compare).
+    cheaper = dst.stats.transfer_us < r.migrations * 1000.0
+    rows.append({"bench": "cluster-migration", "mode": "CLAIM",
+                 "claim_cluster_migration_zero_reprefill":
+                     bool(zero_reprefill),
+                 "claim_cluster_tokens_identical_1_vs_n": bool(identical),
+                 "claim_cluster_migration_cheaper_than_reprefill":
+                     bool(cheaper)})
+    assert identical, "cluster scale-out changed model outputs!"
+    return rows
+
+
+def cluster_sim_compare(n_access: int = 2000) -> List[Dict]:
+    """The TLB simulator's cluster model: 4 apps across engine counts.
+
+    One engine = one shared link (the pre-cluster model).  Two engines
+    with private links remove cross-engine link contention; adding a
+    shared host store (1 DRAM lane) re-serializes the transfers there;
+    widening the host lanes relieves it."""
+    from repro.core.tlb_sim import SimConfig, TranslationSim
+    from repro.core.workloads import build_workload, homogeneous_names
+
+    names = homogeneous_names("dct", 4)
+    traces, _ = build_workload(names, "mosaic", seed=0, n_access=n_access)
+    rows = []
+    res = {}
+    for label, n_eng, host_lanes in (("1-engine", 1, 0),
+                                     ("2-engines", 2, 0),
+                                     ("2-engines-shared-host", 2, 1),
+                                     ("2-engines-wide-host", 2, 2)):
+        sim = TranslationSim(
+            SimConfig(mode="mosaic", paging=True, dma_channels=1,
+                      n_engines=n_eng, host_lanes=host_lanes), traces)
+        sim.run()
+        res[label] = (sim.link.contention_total(),
+                      sim.link.host_contention_total())
+        rows.append({"bench": "cluster-sim", "mode": label,
+                     "n_engines": n_eng, "host_lanes": host_lanes,
+                     "faults": sim.link.faults,
+                     "link_contention": round(res[label][0], 1),
+                     "host_contention": round(res[label][1], 1)})
+    rows.append({"bench": "cluster-sim", "mode": "CLAIM",
+                 "claim_cluster_links_cut_link_contention":
+                     bool(res["2-engines"][0] < res["1-engine"][0]
+                          and res["1-engine"][0] > 0),
+                 "claim_cluster_host_lanes_relieve_shared_store":
+                     bool(res["2-engines-shared-host"][1]
+                          > res["2-engines-wide-host"][1])})
     return rows

@@ -23,11 +23,20 @@ the report, and the eviction/parking gathers riding the duplex "out"
 lanes.  ``--no-prefix-cache`` disables reuse for comparison (tokens are
 byte-identical either way).
 
+With ``--engines N`` the same workload runs on a cluster of N engine
+replicas over one shared host tier (DESIGN.md §10): the deadline-aware
+router load-balances admissions, the shared content-hash index lets a
+prefix parked by one replica hit on every other, and work stealing
+migrates preempted requests between replicas through host-frame leases
+(zero re-prefill).  Outputs stay byte-identical to the 1-engine run.
+
     PYTHONPATH=src python examples/serve_multitenant.py --requests 10
     PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
         --oversubscribe 2
     PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
         --shared-prefix 40
+    PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
+        --shared-prefix 40 --engines 2
 """
 
 import argparse
@@ -36,18 +45,30 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import PoolGeometry
+from repro.serving.cluster import ServingCluster
 from repro.serving.engine import Request, ServingEngine
 
 
 def run(manager_kind: str, n_requests: int, seed: int,
         oversubscribe: float = 1.0, fault_mode: str = "async",
-        shared_prefix: int = 0, prefix_cache: bool = True):
+        shared_prefix: int = 0, prefix_cache: bool = True,
+        n_engines: int = 1):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
-    eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
-                        manager_kind=manager_kind, seed=seed,
-                        oversubscription=oversubscribe,
-                        fault_mode=fault_mode, prefix_cache=prefix_cache)
+    if n_engines > 1:
+        cluster = ServingCluster(
+            cfg, geometry=geo, n_engines=n_engines, max_batch=4,
+            max_seq=128, manager_kind=manager_kind, seed=seed,
+            oversubscription=oversubscribe, fault_mode=fault_mode,
+            prefix_cache=prefix_cache)
+        eng = cluster            # same submit/run_until_drained surface
+    else:
+        cluster = None
+        eng = ServingEngine(cfg, geometry=geo, max_batch=4, max_seq=128,
+                            manager_kind=manager_kind, seed=seed,
+                            oversubscription=oversubscribe,
+                            fault_mode=fault_mode,
+                            prefix_cache=prefix_cache)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab_size,
                           shared_prefix).astype(np.int32)
@@ -93,6 +114,9 @@ def main():
                          "every request (prefix-cache reuse, DESIGN.md §8)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable content-hash prefix reuse (comparison)")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="serving-engine replicas over one shared host "
+                         "tier (cluster tier + router, DESIGN.md §10)")
     args = ap.parse_args()
 
     results = {}
@@ -100,9 +124,19 @@ def main():
         eng, reqs, steps = run(kind, args.requests, args.seed,
                                args.oversubscribe, args.fault_mode,
                                shared_prefix=args.shared_prefix,
-                               prefix_cache=not args.no_prefix_cache)
-        st = eng.cache.stats()
-        s = eng.stats
+                               prefix_cache=not args.no_prefix_cache,
+                               n_engines=args.engines)
+        if args.engines > 1:
+            cluster_stats = eng.stats()
+            s = cluster_stats.totals
+            st = {}
+            for e in eng.engines:
+                for k, v in e.cache.stats().items():
+                    st[k] = st.get(k, 0.0) + v / len(eng.engines)
+        else:
+            cluster_stats = None
+            st = eng.cache.stats()
+            s = eng.stats
         line = (f"[{kind:8}] {steps} engine steps | "
                 f"{s.tok_per_s():7.1f} tok/s (CPU) | "
                 f"coalesced {s.coalesced_mean:5.1%} | "
@@ -122,7 +156,11 @@ def main():
                      f"{s.admit_cold_mean_us() / 1e3:.0f} ms cold | "
                      f"out {s.bytes_out / 1024:.0f} KiB")
         print(line)
-        print(f"           {s.summary()}")
+        if cluster_stats is not None:
+            for sub in cluster_stats.summary().splitlines():
+                print(f"           {sub}")
+        else:
+            print(f"           {s.summary()}")
         results[kind] = {r.rid: tuple(r.out) for r in reqs}
 
     same = results["mosaic"] == results["gpu-mmu"]

@@ -92,6 +92,14 @@ class SimConfig:
     # link — so the sim generates the two-direction traffic the duplex
     # model distinguishes.
     hbm_pages_per_app: Optional[int] = None
+    # Cluster tier (DESIGN.md §10): engines each own `dma_channels`
+    # host↔device lanes (apps are striped app % n_engines), so per-engine
+    # links remove cross-engine *link* contention — but with a shared
+    # host tier every transfer must also occupy one of `host_lanes` host
+    # DRAM lanes, the new shared bottleneck.  host_lanes=0 leaves the
+    # host store unmodeled (pre-cluster behavior, and the default).
+    n_engines: int = 1
+    host_lanes: int = 0
     clock_ghz: float = 1.02          # shader clock (Table 1: 1020 MHz)
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     # Page-size mode: "mosaic" uses per-frame coalesced bits from the
@@ -197,26 +205,63 @@ class Link:
     def __init__(self, cfg: SimConfig, n_apps: int = 1):
         self.cfg = cfg
         n = max(1, cfg.dma_channels)
-        self.channel_busy = [0.0] * n                   # inbound lanes
-        # Half-duplex shares the same list object (either direction's
+        E = max(1, cfg.n_engines)
+        # Per-engine link lanes (DESIGN.md §10): engine e's inbound lanes
+        # are _lanes_in[e]; a single-engine sim degenerates to the
+        # pre-cluster model exactly.
+        self._lanes_in = [[0.0] * n for _ in range(E)]
+        # Half-duplex shares the same list objects (either direction's
         # transfer occupies the single per-channel timeline).
-        self.channel_busy_out = [0.0] * n if cfg.duplex \
-            else self.channel_busy
+        self._lanes_out = [[0.0] * n for _ in range(E)] if cfg.duplex \
+            else self._lanes_in
+        # Legacy aliases (engine 0) so existing single-engine callers and
+        # tests keep reading the same attributes.
+        self.channel_busy = self._lanes_in[0]
+        self.channel_busy_out = self._lanes_out[0]
+        # Shared host-store DRAM lanes: every transfer of every engine,
+        # both directions, must also book one (host DRAM bandwidth is
+        # direction-agnostic).  Empty list = unmodeled.
+        self._host_lanes = [0.0] * max(0, cfg.host_lanes)
         self.faults = 0
         self.fault_cycles_total = 0.0
-        self.contention_cycles = [0.0] * n_apps         # inbound
+        self.contention_cycles = [0.0] * n_apps         # inbound, link
         self.writebacks = 0
         self.writeback_cycles_total = 0.0
         self.contention_cycles_out = [0.0] * n_apps
+        # Queueing a transfer pays at the shared host store *after* its
+        # link lane is free — the cluster-tier bottleneck stat.
+        self.host_contention_cycles = [0.0] * n_apps
 
     @property
     def busy_until(self) -> float:
-        return max(max(self.channel_busy), max(self.channel_busy_out))
+        return max(max(max(l) for l in self._lanes_in),
+                   max(max(l) for l in self._lanes_out))
 
     def _occupy(self, lanes, now: float, transfer: float):
         ch = min(range(len(lanes)), key=lambda i: lanes[i])
         begin = max(now, lanes[ch])
         lanes[ch] = begin + transfer
+        return begin
+
+    def _book(self, lanes, now: float, transfer: float, app: int) -> float:
+        """Occupy a link lane and, when modeled, a shared host-store
+        lane; the transfer starts when *both* are free.  Returns the
+        start time; host-store queueing beyond the link's own is
+        attributed to ``host_contention_cycles``."""
+        link_begin = self._occupy(lanes, now, transfer)
+        if not self._host_lanes:
+            return link_begin
+        h = min(range(len(self._host_lanes)),
+                key=lambda i: self._host_lanes[i])
+        begin = max(link_begin, self._host_lanes[h])
+        self._host_lanes[h] = begin + transfer
+        if begin > link_begin:
+            # The link lane sat idle waiting for host DRAM: re-point its
+            # busy horizon at the true completion.
+            ch = lanes.index(link_begin + transfer)
+            lanes[ch] = begin + transfer
+        if app < len(self.host_contention_cycles):
+            self.host_contention_cycles[app] += begin - link_begin
         return begin
 
     def _costs(self):
@@ -227,30 +272,35 @@ class Link:
         setup = c.link.setup_us * c.clock_ghz * 1e3 / k
         return transfer, setup
 
-    def fault(self, now: float, app: int = 0) -> float:
+    def fault(self, now: float, app: int = 0, engine: int = 0) -> float:
         transfer, setup = self._costs()
-        begin = self._occupy(self.channel_busy, now, transfer)
+        lanes = self._lanes_in[engine % len(self._lanes_in)]
+        free_at = min(lanes)
+        begin = self._book(lanes, now, transfer, app)
         fin = begin + setup + transfer              # faulting warp's latency
         self.faults += 1
         self.fault_cycles_total += fin - now
         if app < len(self.contention_cycles):
-            self.contention_cycles[app] += begin - now
+            self.contention_cycles[app] += max(free_at - now, 0.0)
         return fin
 
-    def writeback(self, now: float, app: int = 0) -> float:
+    def writeback(self, now: float, app: int = 0, engine: int = 0) -> float:
         """Outbound device→host eviction transfer.
 
         Write-back buffering keeps it off the faulting warp's critical
         path — the return value is the channel-occupancy end, not a warp
         stall — but the transfer occupies an "out" lane (or, when
-        half-duplex, the shared lane, where it queues future faults).
+        half-duplex, the shared lane, where it queues future faults) and,
+        in a cluster, a shared host-store lane.
         """
         transfer, _setup = self._costs()
-        begin = self._occupy(self.channel_busy_out, now, transfer)
+        lanes = self._lanes_out[engine % len(self._lanes_out)]
+        free_at = min(lanes)
+        begin = self._book(lanes, now, transfer, app)
         self.writebacks += 1
         self.writeback_cycles_total += begin + transfer - now
         if app < len(self.contention_cycles_out):
-            self.contention_cycles_out[app] += begin - now
+            self.contention_cycles_out[app] += max(free_at - now, 0.0)
         return begin + transfer
 
     def contention_total(self) -> float:
@@ -258,6 +308,9 @@ class Link:
 
     def contention_out_total(self) -> float:
         return float(sum(self.contention_cycles_out))
+
+    def host_contention_total(self) -> float:
+        return float(sum(self.host_contention_cycles))
 
 
 # --------------------------------------------------------------------------- traces
@@ -363,16 +416,19 @@ class TranslationSim:
         if cfg.paging and not cfg.warm:
             ppn = int(tr.ppn[i])
             res = self.resident[app]
+            # Cluster striping (DESIGN.md §10): app a runs on engine
+            # a % n_engines and uses that engine's link lanes.
+            engine = app % max(1, cfg.n_engines)
             if ppn in res:
                 res.move_to_end(ppn)
             else:
                 cap = cfg.hbm_pages_per_app
                 if cap is not None and len(res) >= cap:
                     res.popitem(last=False)         # evict LRU
-                    self.link.writeback(now, app)
+                    self.link.writeback(now, app, engine)
                 res[ppn] = True
                 self.fault_count[app] += 1
-                done = max(done, self.link.fault(now, app))
+                done = max(done, self.link.fault(now, app, engine))
         return done
 
     # -- main loop -----------------------------------------------------------------

@@ -3,11 +3,17 @@
 Stands up the multi-tenant continuous-batching engine on the Mosaic pool
 and replays a synthetic request stream (or reads prompts from a token
 file). ``--manager gpu-mmu`` flips to the baseline allocator for A/B.
+``--engines N`` serves the stream from a cluster of N engine replicas
+over one shared host tier, with the deadline-aware router dispatching
+(and, unless ``--no-migrate``, work-stealing) across them — DESIGN.md
+§10; outputs are byte-identical to the single-engine run.
 
 CPU example (smoke-scale):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
         --smoke --requests 8 --max-new 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+        --smoke --requests 8 --max-new 8 --engines 2
 """
 
 from __future__ import annotations
@@ -35,8 +41,18 @@ def main():
     ap.add_argument("--frame-pages", type=int, default=None,
                     help="default: 4 for --smoke, 16 otherwise")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engines", type=int, default=1,
+                    help="engine replicas over one shared host tier "
+                         "(cluster tier + deadline router, DESIGN.md §10)")
+    ap.add_argument("--router", default="slack",
+                    choices=["slack", "fifo"],
+                    help="cluster dispatch policy (with --engines > 1)")
+    ap.add_argument("--no-migrate", action="store_true",
+                    help="disable work-stealing migration between "
+                         "replicas (with --engines > 1)")
     args = ap.parse_args()
 
+    from repro.serving.cluster import ServingCluster
     from repro.serving.engine import Request, ServingEngine
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
@@ -44,9 +60,17 @@ def main():
     geo = PoolGeometry(
         page_tokens=args.page_tokens or (8 if args.smoke else 64),
         frame_pages=args.frame_pages or (4 if args.smoke else 16))
-    eng = ServingEngine(cfg, geometry=geo, max_batch=args.max_batch,
-                        max_seq=args.max_seq, manager_kind=args.manager,
-                        seed=args.seed)
+    if args.engines > 1:
+        eng = ServingCluster(cfg, geometry=geo, n_engines=args.engines,
+                             max_batch=args.max_batch,
+                             max_seq=args.max_seq,
+                             manager_kind=args.manager, seed=args.seed,
+                             router_policy=args.router,
+                             migrate=not args.no_migrate)
+    else:
+        eng = ServingEngine(cfg, geometry=geo, max_batch=args.max_batch,
+                            max_seq=args.max_seq,
+                            manager_kind=args.manager, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -58,12 +82,17 @@ def main():
         reqs.append(r)
         eng.submit(r)
     steps = eng.run_until_drained()
-    st = eng.cache.stats()
-    print(f"[{args.manager}] {len(reqs)} requests in {steps} steps | "
-          f"{eng.stats.tok_per_s():.1f} tok/s (this host) | "
-          f"coalesced {eng.stats.coalesced_mean:.1%} | "
-          f"CAC copies {eng.stats.compaction_copies} | "
-          f"bloat {st.get('memory_bloat', 1.0):.2f}")
+    if args.engines > 1:
+        print(f"[{args.manager}] {len(reqs)} requests in {steps} "
+              f"cluster steps")
+        print(eng.stats().summary())
+    else:
+        st = eng.cache.stats()
+        print(f"[{args.manager}] {len(reqs)} requests in {steps} steps | "
+              f"{eng.stats.tok_per_s():.1f} tok/s (this host) | "
+              f"coalesced {eng.stats.coalesced_mean:.1%} | "
+              f"CAC copies {eng.stats.compaction_copies} | "
+              f"bloat {st.get('memory_bloat', 1.0):.2f}")
     for r in reqs[:4]:
         print(f"  rid={r.rid} tenant={r.tenant} -> {r.out[:10]}")
 

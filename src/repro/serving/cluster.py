@@ -1,0 +1,457 @@
+"""Cluster serving tier: N engine replicas over one shared host tier.
+
+Mosaic's core invariant — a large frame holds base pages of **one**
+memory protection domain, so contiguity survives without migration — has
+so far lived inside a single :class:`~repro.serving.engine.ServingEngine`.
+This module lifts it to the cluster level (DESIGN.md §10): several engine
+replicas (one per accelerator) share one process-wide host DRAM tier, and
+the *host* large frames obey the same single-domain rule via per-engine
+**frame leases**:
+
+* :class:`HostFrameTable` — places every parked page payload into a host
+  frame of ``frame_pages`` slots.  A frame is leased to exactly one
+  protection domain (an engine id, or the shared prefix-cache domain);
+  pages of different domains never share a frame, and a frame whose last
+  page leaves is returned whole to the free pool (the soft guarantee,
+  host-side).  ``migrate()`` re-leases a request's pages to another
+  domain — flipping the owner of exclusively-held frames outright, and
+  re-placing only the pages of mixed frames — which is the entire data
+  cost of moving a request between engines: host-side bookkeeping, zero
+  device↔device traffic.
+* :class:`LeasedStoreView` — the :class:`~repro.serving.host_tier.
+  HostPageStore` facade each engine (and the prefix index) holds: same
+  interface, one shared store underneath, every put/pop/discard
+  mirrored into the frame table under the view's domain.
+* :class:`SharedHostTier` — one ``HostPageStore`` + one
+  :class:`~repro.serving.host_tier.PrefixIndex` (or per-engine indexes
+  with disjoint owner namespaces, for the A/B bench) + the frame table.
+* :class:`ServingCluster` — builds the replicas (shared params, so all
+  replicas are bitwise-identical models), wires them to the tier and to
+  the deadline-aware :class:`~repro.serving.router.RequestRouter`, and
+  aggregates :class:`ClusterStats`.
+
+Cross-engine prefix sharing falls out for free: the index's payloads
+live under negative owner ids in the *shared* store, and page locations
+``(shard, vpn)`` are deterministic per geometry, so a prefix parked by
+replica 0 faults into replica 1's pool through replica 1's own DMA
+lanes.  Work-stealing migration (router) hands a preempted request to an
+idle replica by re-leasing its host frames — the request resumes there
+with **zero re-prefill**, exactly the paper's "no costly base page
+migration" story at cluster scale.
+
+Request ids must be unique cluster-wide (the shared store keys payloads
+by ``(rid, shard, vpn)``); the frame table asserts double-placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
+
+from repro.configs.base import ModelConfig, PoolGeometry
+from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.host_tier import HostPageStore, PrefixIndex
+from repro.serving.router import RequestRouter, RouterStats
+
+Key = Tuple[int, int, int]          # (seq, shard, local vpn)
+Domain = Hashable                   # engine id, or ("prefix", …)
+
+PREFIX_DOMAIN: Domain = "prefix"
+
+
+class HostFrameTable:
+    """Host-DRAM frame leases: the single-domain-per-frame rule, lifted.
+
+    Frames are numbered from 0 and hold ``frame_pages`` page slots each.
+    ``place(domain, key)`` finds (or leases) a frame of that domain with
+    a free slot; ``release(key)`` frees the slot and returns the frame
+    whole to the free pool when it empties — so, as in CoCoA, frames
+    recycle at frame granularity and never fragment across domains.
+    """
+
+    def __init__(self, frame_pages: int) -> None:
+        assert frame_pages >= 1
+        self.frame_pages = frame_pages
+        self._key_frame: Dict[Key, int] = {}
+        self._frame_keys: Dict[int, Set[Key]] = {}
+        self._frame_owner: Dict[int, Domain] = {}
+        self._open: Dict[Domain, Set[int]] = {}   # leased, ≥1 free slot
+        self._free: List[int] = []                # recycled frame ids
+        self._next = 0
+        self.stats = {
+            "frames_leased": 0, "frames_recycled": 0, "peak_frames": 0,
+            "placed_pages": 0, "page_moves": 0, "whole_frame_moves": 0,
+        }
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self._frame_owner)
+
+    def owner_of(self, key: Key) -> Optional[Domain]:
+        f = self._key_frame.get(key)
+        return None if f is None else self._frame_owner[f]
+
+    def frames_of(self, domain: Domain) -> int:
+        return sum(1 for d in self._frame_owner.values() if d == domain)
+
+    # ------------------------------------------------------------- mutate
+
+    def _lease(self, domain: Domain) -> int:
+        if self._free:
+            f = self._free.pop()            # LIFO: reuse hot frame ids
+        else:
+            f = self._next
+            self._next += 1
+        self._frame_owner[f] = domain
+        self._frame_keys[f] = set()
+        self._open.setdefault(domain, set()).add(f)
+        self.stats["frames_leased"] += 1
+        self.stats["peak_frames"] = max(self.stats["peak_frames"],
+                                        len(self._frame_owner))
+        return f
+
+    def place(self, domain: Domain, key: Key) -> int:
+        """Assign ``key`` a slot in a frame of ``domain``; returns the
+        frame id.  Placing an already-placed key is an error — it would
+        mean two engines parked the same ``(rid, shard, vpn)``, i.e. a
+        cluster-wide rid collision."""
+        assert key not in self._key_frame, \
+            f"host page {key} already placed (cluster-wide rid collision?)"
+        open_frames = self._open.setdefault(domain, set())
+        f = min(open_frames) if open_frames else self._lease(domain)
+        self._frame_keys[f].add(key)
+        self._key_frame[key] = f
+        if len(self._frame_keys[f]) >= self.frame_pages:
+            open_frames.discard(f)
+        self.stats["placed_pages"] += 1
+        return f
+
+    def release(self, key: Key) -> None:
+        f = self._key_frame.pop(key, None)
+        if f is None:
+            return                          # never placed (private store)
+        keys = self._frame_keys[f]
+        keys.discard(key)
+        domain = self._frame_owner[f]
+        if not keys:                        # whole-frame return
+            del self._frame_keys[f]
+            del self._frame_owner[f]
+            self._open.get(domain, set()).discard(f)
+            self._free.append(f)
+            self.stats["frames_recycled"] += 1
+        else:
+            self._open.setdefault(domain, set()).add(f)
+
+    def migrate(self, keys: Sequence[Key], dst: Domain) -> int:
+        """Re-lease ``keys`` (one request's host pages) to ``dst``.
+
+        A frame every one of whose pages is migrating just flips its
+        owner — the whole-frame handoff, zero data movement even in
+        host DRAM.  Pages sharing a frame with a non-migrating tenant
+        are re-placed into ``dst`` frames (a host-side memcpy in the
+        model; still no device traffic).  Returns the page count.
+        """
+        moving = set(keys)
+        by_frame: Dict[int, List[Key]] = {}
+        for k in keys:
+            f = self._key_frame.get(k)
+            if f is not None:
+                by_frame.setdefault(f, []).append(k)
+        for f, ks in sorted(by_frame.items()):
+            src = self._frame_owner[f]
+            if src == dst:
+                continue
+            if set(ks) == self._frame_keys[f]:
+                self._frame_owner[f] = dst
+                if f in self._open.get(src, set()):
+                    self._open[src].discard(f)
+                    self._open.setdefault(dst, set()).add(f)
+                self.stats["whole_frame_moves"] += 1
+            else:
+                for k in ks:
+                    self.release(k)
+                    self.place(dst, k)
+                    self.stats["page_moves"] += 1
+        return len(moving)
+
+    # ------------------------------------------------------------- checks
+
+    def check_invariants(self) -> None:
+        for f, keys in self._frame_keys.items():
+            assert f in self._frame_owner, f"frame {f} leased to nobody"
+            assert 0 < len(keys) <= self.frame_pages, \
+                f"frame {f} slot count {len(keys)}"
+            for k in keys:
+                assert self._key_frame.get(k) == f, (k, f)
+        for domain, frames in self._open.items():
+            for f in frames:
+                assert self._frame_owner.get(f) == domain, \
+                    f"open frame {f} not owned by {domain}"
+                assert len(self._frame_keys[f]) < self.frame_pages
+        # The invariant this whole class exists for: every placed page's
+        # frame is leased to exactly one domain (structural here — the
+        # dict can't hold two owners — but place() is the only write).
+        assert len(self._key_frame) == sum(
+            len(ks) for ks in self._frame_keys.values())
+
+
+class LeasedStoreView:
+    """Per-domain facade over the shared :class:`HostPageStore`.
+
+    Same interface as the store (engines and the prefix index are
+    oblivious), with every payload movement mirrored into the frame
+    table under this view's protection domain.  Queries and stats
+    delegate to the shared store — all views see all payloads (the
+    point: a prefix parked by one engine is readable by every other),
+    but each *write* lands in this domain's frames only.
+    """
+
+    def __init__(self, store: HostPageStore, frames: HostFrameTable,
+                 domain: Domain) -> None:
+        self.store = store
+        self.frames = frames
+        self.domain = domain
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    @property
+    def stats(self) -> dict:
+        return self.store.stats
+
+    @property
+    def _pages(self):
+        return self.store._pages
+
+    def has(self, seq: int, shard: int, vpn: int) -> bool:
+        return self.store.has(seq, shard, vpn)
+
+    def seq_pages(self, seq: int) -> List[Key]:
+        return self.store.seq_pages(seq)
+
+    def nbytes(self) -> int:
+        return self.store.nbytes()
+
+    def request_pages(self) -> int:
+        return self.store.request_pages()
+
+    def peek(self, seq: int, shard: int, vpn: int):
+        return self.store.peek(seq, shard, vpn)
+
+    # ------------------------------------------------------------- movement
+
+    def put(self, seq: int, shard: int, vpn: int, k_page, v_page, *,
+            kind: str = "swap") -> None:
+        if not self.store.has(seq, shard, vpn):
+            self.frames.place(self.domain, (seq, shard, vpn))
+        self.store.put(seq, shard, vpn, k_page, v_page, kind=kind)
+
+    def pop(self, seq: int, shard: int, vpn: int):
+        kv = self.store.pop(seq, shard, vpn)
+        self.frames.release((seq, shard, vpn))
+        return kv
+
+    def discard(self, seq: int, shard: int, vpn: int) -> bool:
+        if self.store.discard(seq, shard, vpn):
+            self.frames.release((seq, shard, vpn))
+            return True
+        return False
+
+    def drop_seq(self, seq: int) -> int:
+        keys = self.store.seq_pages(seq)
+        n = self.store.drop_seq(seq)
+        for k in keys:
+            self.frames.release(k)
+        return n
+
+    def note_swap_out(self) -> None:
+        self.store.note_swap_out()
+
+    def note_swap_in(self) -> None:
+        self.store.note_swap_in()
+
+
+class SharedHostTier:
+    """One host DRAM tier for the whole cluster: shared payload store,
+    frame leases, and the prefix index (shared by default; per-engine
+    indexes with disjoint owner namespaces when ``share_prefix=False``
+    — the A/B the ``cluster`` bench measures)."""
+
+    def __init__(self, geometry: PoolGeometry, *, n_engines: int,
+                 share_prefix: bool = True,
+                 prefix_capacity_pages: int = 4096) -> None:
+        self.geo = geometry
+        self.n_engines = n_engines
+        self.store = HostPageStore()
+        self.frames = HostFrameTable(geometry.frame_pages)
+        self.share_prefix = share_prefix
+        if share_prefix:
+            self.prefix: Optional[PrefixIndex] = PrefixIndex(
+                self.view(PREFIX_DOMAIN), geometry.page_tokens,
+                capacity_pages=prefix_capacity_pages)
+            self._engine_prefix: List[Optional[PrefixIndex]] = []
+        else:
+            self.prefix = None
+            # Disjoint owner progressions: engine i mints
+            # -(i+1), -(i+1+n), -(i+1+2n), … so per-engine payload keys
+            # in the one shared store can never collide.
+            self._engine_prefix = [
+                PrefixIndex(self.view((PREFIX_DOMAIN, i)),
+                            geometry.page_tokens,
+                            capacity_pages=prefix_capacity_pages,
+                            owner_start=-(i + 1), owner_step=-n_engines)
+                for i in range(n_engines)]
+
+    def view(self, domain: Domain) -> LeasedStoreView:
+        return LeasedStoreView(self.store, self.frames, domain)
+
+    def prefix_for(self, engine_id: int) -> Optional[PrefixIndex]:
+        if self.share_prefix:
+            return self.prefix
+        return self._engine_prefix[engine_id]
+
+    def migrate_seq(self, seq: int, dst_engine: int) -> int:
+        """Re-lease a request's host pages to another engine's domain —
+        the data half of work-stealing migration."""
+        return self.frames.migrate(self.store.seq_pages(seq), dst_engine)
+
+    def check_invariants(self) -> None:
+        self.frames.check_invariants()
+        # Every stored payload is placed, and in a frame of one domain.
+        for key in self.store._pages:
+            assert self.frames.owner_of(key) is not None, \
+                f"host page {key} stored but not leased"
+
+
+# ---------------------------------------------------------------- cluster
+
+
+def aggregate_engine_stats(stats: Sequence[EngineStats]) -> EngineStats:
+    """Sum scalar counters (and merge the per-tier deadline dicts) of
+    several replicas into one cluster-wide :class:`EngineStats` — the
+    result supports the same ``summary()`` / ``slo_attainment()`` API."""
+    agg = EngineStats()
+    for st in stats:
+        for f in dataclasses.fields(EngineStats):
+            v = getattr(st, f.name)
+            if isinstance(v, (int, float)):
+                setattr(agg, f.name, getattr(agg, f.name) + v)
+        for tier, n in st.deadline_hits.items():
+            agg.deadline_hits[tier] = agg.deadline_hits.get(tier, 0) + n
+        for tier, n in st.deadline_misses.items():
+            agg.deadline_misses[tier] = agg.deadline_misses.get(tier, 0) + n
+    return agg
+
+
+class ClusterStats:
+    """Cluster-wide rollup: per-engine EngineStats aggregated, router
+    dispatch/migration counters, and host-tier frame-lease stats."""
+
+    def __init__(self, engines: Sequence[ServingEngine],
+                 router: RequestRouter,
+                 tier: Optional[SharedHostTier]) -> None:
+        self.engines = list(engines)
+        self.router = router
+        self.tier = tier
+
+    @property
+    def totals(self) -> EngineStats:
+        return aggregate_engine_stats([e.stats for e in self.engines])
+
+    def slo_attainment(self, priority: Optional[int] = None
+                       ) -> Optional[float]:
+        return self.totals.slo_attainment(priority)
+
+    def prefix_hit_rate(self) -> float:
+        t = self.totals
+        return t.prefix_hits / max(t.prefix_hits + t.prefix_misses, 1)
+
+    def summary(self) -> str:
+        lines = [f"cluster: {len(self.engines)} engines | "
+                 f"{self.totals.summary()}"]
+        for e in self.engines:
+            lines.append(f"  engine[{e.engine_id}]: {e.stats.summary()}")
+        r = self.router.stats
+        lines.append(
+            f"  router: {r.submitted} submitted | dispatched "
+            + (", ".join(f"e{i}:{n}" for i, n in sorted(r.dispatched.items()))
+               or "-")
+            + f" | migrations {r.migrations} ({r.migrated_pages} pages)")
+        if self.tier is not None:
+            fs = self.tier.frames.stats
+            lines.append(
+                f"  host tier: {len(self.tier.store)} pages in "
+                f"{len(self.tier.frames)} frames (peak {fs['peak_frames']}) "
+                f"| moves {fs['whole_frame_moves']} whole-frame / "
+                f"{fs['page_moves']} page")
+        return "\n".join(lines)
+
+
+class ServingCluster:
+    """N :class:`ServingEngine` replicas + shared host tier + router.
+
+    All replicas share one ``params`` pytree (replica equivalence is what
+    makes cross-engine prefix reuse and migration bitwise-safe), their
+    own pools/DMA lanes/clocks, and — unless ``share_host=False`` (the
+    per-engine baseline the benches compare against) — one
+    :class:`SharedHostTier`.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, geometry: PoolGeometry,
+                 n_engines: int = 2, max_batch: int = 4, max_seq: int = 128,
+                 manager_kind: str = "mosaic", seed: int = 0,
+                 share_host: bool = True, share_prefix: bool = True,
+                 prefix_cache: bool = True,
+                 prefix_capacity_pages: int = 4096,
+                 router_policy: str = "slack", migrate: bool = True,
+                 **engine_kw) -> None:
+        assert n_engines >= 1
+        self.cfg = cfg
+        self.geo = geometry
+        self.tier: Optional[SharedHostTier] = None
+        if share_host:
+            self.tier = SharedHostTier(
+                geometry, n_engines=n_engines, share_prefix=share_prefix,
+                prefix_capacity_pages=prefix_capacity_pages)
+        self.engines: List[ServingEngine] = []
+        params = None
+        for i in range(n_engines):
+            eng = ServingEngine(
+                cfg, geometry=geometry, max_batch=max_batch,
+                max_seq=max_seq, manager_kind=manager_kind, seed=seed,
+                params=params, engine_id=i,
+                host=self.tier.view(i) if self.tier else None,
+                prefix_index=(self.tier.prefix_for(i)
+                              if self.tier and prefix_cache else None),
+                prefix_cache=prefix_cache,
+                prefix_capacity_pages=prefix_capacity_pages,
+                **engine_kw)
+            params = eng.params          # replicas share one weight tree
+            self.engines.append(eng)
+        self.router = RequestRouter(self.engines, tier=self.tier,
+                                    policy=router_policy, migrate=migrate)
+
+    # ------------------------------------------------------------- serving
+
+    def submit(self, req: Request, engine: Optional[int] = None) -> None:
+        self.router.submit(req, engine=engine)
+
+    def step(self) -> bool:
+        return self.router.step()
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        return self.router.run_until_drained(max_steps=max_steps)
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> ClusterStats:
+        return ClusterStats(self.engines, self.router, self.tier)
+
+    def check_invariants(self) -> None:
+        for e in self.engines:
+            e.cache.check_invariants()
+        if self.tier is not None:
+            self.tier.check_invariants()

@@ -49,6 +49,19 @@ scheduling is SLO-aware: within a priority tier, preempted requests
 resume tightest-deadline-first and the deadline pressure widens the
 resume-prefetch window (``Prefetcher.plan_depth``).
 
+Cluster tier (DESIGN.md §10): an engine can be one replica of a
+:class:`~repro.serving.cluster.ServingCluster` — it then holds a
+domain-bound view of the shared host store (``host=``), a cluster-wide
+prefix index (``prefix_index=``), and an ``engine_id`` naming its
+frame-lease protection domain.  ``export_preempted``/``import_preempted``
+hand a fully-swapped-out request to another replica (work-stealing
+migration, driven by the :class:`~repro.serving.router.RequestRouter`)
+with zero re-prefill.  Completions with a deadline record per-priority-
+tier hit/miss counters (``EngineStats.deadline_*``; ``summary()`` prints
+SLO attainment).  Non-dense model families never park into (or match
+from) a prefix index — suffix prefill could not replay their KV — and
+count the skips in ``prefix_park_skipped`` instead.
+
 The engine is deliberately host-driven: page tables are packed on host per
 step (Mosaic's runtime half), while the device step (prefill/decode +
 pool writes) is a single jitted call (the hardware half).
@@ -129,6 +142,37 @@ class EngineStats:
     admit_colds: int = 0            # admissions via the full-prefill path
     admit_hit_us: float = 0.0       # wall µs spent in cache-hit admissions
     admit_cold_us: float = 0.0      # wall µs spent in cold admissions
+    # Non-dense fallback (DESIGN.md §10): parks skipped because the model
+    # family cannot replay cached KV (MoE routing / MLA latents / ssm
+    # state) — counted instead of silently caching unreplayable pages.
+    prefix_park_skipped: int = 0
+    # Cross-engine migration (DESIGN.md §10): preempted requests handed
+    # off through the shared host tier, never re-prefilled.
+    migrations_out: int = 0
+    migrations_in: int = 0
+    # Deadline accounting per priority tier (ROADMAP follow-up): a
+    # request with a deadline counts as a hit when it completes with
+    # ``clock_us <= deadline_us`` on the engine's modeled clock.
+    deadline_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    deadline_misses: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def note_deadline(self, priority: int, hit: bool) -> None:
+        d = self.deadline_hits if hit else self.deadline_misses
+        d[priority] = d.get(priority, 0) + 1
+
+    def slo_attainment(self, priority: Optional[int] = None
+                       ) -> Optional[float]:
+        """Fraction of deadline-carrying completions that met their
+        deadline — overall, or for one priority tier.  None when no
+        deadline-carrying request has completed (not 1.0: 'no SLOs set'
+        must be distinguishable from 'all SLOs met')."""
+        if priority is None:
+            hits = sum(self.deadline_hits.values())
+            total = hits + sum(self.deadline_misses.values())
+        else:
+            hits = self.deadline_hits.get(priority, 0)
+            total = hits + self.deadline_misses.get(priority, 0)
+        return None if total == 0 else hits / total
 
     @property
     def coalesced_mean(self) -> float:
@@ -170,6 +214,20 @@ class EngineStats:
         if self.prefix_hits or self.prefix_misses:
             line += (f" | prefix {self.prefix_hits}/{self.prefix_misses} "
                      f"hit/miss ({self.prefix_reused_tokens} tok reused)")
+        if self.prefix_park_skipped:
+            line += f" | parks skipped {self.prefix_park_skipped} (non-dense)"
+        if self.migrations_out or self.migrations_in:
+            line += (f" | migrated {self.migrations_out} out / "
+                     f"{self.migrations_in} in")
+        att = self.slo_attainment()
+        if att is not None:
+            tiers = sorted(set(self.deadline_hits) | set(self.deadline_misses),
+                           reverse=True)
+            per = ", ".join(
+                f"t{t} {self.deadline_hits.get(t, 0)}/"
+                f"{self.deadline_hits.get(t, 0) + self.deadline_misses.get(t, 0)}"
+                for t in tiers)
+            line += f" | SLO {att:.1%} ({per})"
         return line
 
 
@@ -185,10 +243,16 @@ class ServingEngine:
                  prefix_cache: bool = True,
                  prefix_capacity_pages: int = 4096,
                  duplex: bool = True,
-                 slo_urgency_us: float = 1000.0):
+                 slo_urgency_us: float = 1000.0,
+                 host: Optional[HostPageStore] = None,
+                 prefix_index: Optional[PrefixIndex] = None,
+                 engine_id: int = 0):
         assert fault_mode in ("async", "sync"), fault_mode
         assert victim_policy in ("cost", "priority"), victim_policy
         self.cfg = cfg
+        # Replica identity within a cluster (DESIGN.md §10): the host-tier
+        # frame-lease protection domain and the reporting label.
+        self.engine_id = engine_id
         self.fault_mode = fault_mode
         self.victim_policy = victim_policy
         # Full-duplex outbound modeling (DESIGN.md §8): eviction gathers
@@ -234,15 +298,24 @@ class ServingEngine:
         self.cache = ShardedKVCache(geometry, per_shard, n_shards,
                                     manager_kind, link=self.link,
                                     page_bytes=page_bytes)
-        self.host = HostPageStore()
+        # ``host`` may be a cluster-shared store view (DESIGN.md §10);
+        # standalone engines own a private store as before.
+        self.host = host if host is not None else HostPageStore()
         # Content-hash prefix cache (DESIGN.md §8).  Suffix-only prefill
         # needs full-sequence attention over cached KV pages, which only
         # the dense-transformer family supports bitwise (MoE capacity
         # routing is batch-shape-dependent; ssm/hybrid carry recurrent
         # state; encdec cross-attends; MLA caches latents).
+        self.prefix_supported = (cfg.family == "dense" and cfg.mla is None
+                                 and bool(page_bytes))
         self.prefix: Optional[PrefixIndex] = None
-        if prefix_cache and cfg.family == "dense" and cfg.mla is None \
-                and page_bytes:
+        if prefix_index is not None:
+            # Cluster-shared index: keep the reference even when this
+            # replica's model family cannot replay cached KV — the
+            # match/park paths skip and count instead of caching
+            # unreplayable pages (the MoE/MLA fallback, DESIGN.md §10).
+            self.prefix = prefix_index if prefix_cache else None
+        elif prefix_cache and self.prefix_supported:
             self.prefix = PrefixIndex(self.host, geometry.page_tokens,
                                       capacity_pages=prefix_capacity_pages)
         self.params = params if params is not None else self.lm.init(
@@ -257,6 +330,10 @@ class ServingEngine:
         self._held: List[Request] = []
         self._saved_tokens: Dict[int, int] = {}
         self.active: List[Request] = []
+        # rids migrated away to another engine (DESIGN.md §10): their
+        # in-flight prefetch payloads must settle as waste here, never
+        # re-stage — the destination engine owns the host copies now.
+        self._foreign: set = set()
         self._stalled_steps = 0      # consecutive no-decode steps
         self.stats = EngineStats()
         # Async fault-in pipeline (DESIGN.md §7): DMA channel timeline +
@@ -489,6 +566,46 @@ class ServingEngine:
                 return True
         return False
 
+    # ------------------------------------------------- cross-engine handoff
+
+    def export_preempted(self, rid: int) -> Optional[dict]:
+        """Detach a preempted request for migration to another engine
+        (DESIGN.md §10).  The request must be fully swapped out (it is:
+        preemption gathers every resident page to the host store), so
+        the bundle is pure host-side state — the Request, its decode
+        state, and its saved token count.  Its host-resident pages stay
+        in the (shared) store; the cluster re-leases their frames to the
+        destination domain.  Local staging/prefetch state for the rid is
+        invalidated, and in-flight DMA payloads will settle as waste."""
+        for r in self.preempted:
+            if r.rid == rid:
+                break
+        else:
+            return None
+        self.preempted.remove(r)
+        bundle = {"request": r, "state": self.states.pop(rid, None),
+                  "saved_tokens": self._saved_tokens.pop(rid)}
+        dropped = self.staging.invalidate_seq(rid)
+        self.stats.prefetch_wasted += dropped
+        self.prefetch.stats["wasted_pages"] += dropped
+        self.prefetch.cancel_seq(rid)
+        self._foreign.add(rid)
+        self.stats.migrations_out += 1
+        return bundle
+
+    def import_preempted(self, bundle: dict) -> None:
+        """Adopt a migrated request: it joins this engine's resume queue
+        and faults its pages in from the (shared) host store through
+        this engine's own DMA lanes — no device-to-device copy and no
+        re-prefill, ever."""
+        r = bundle["request"]
+        self._foreign.discard(r.rid)
+        self.preempted.append(r)
+        if bundle["state"] is not None:
+            self.states[r.rid] = bundle["state"]
+        self._saved_tokens[r.rid] = bundle["saved_tokens"]
+        self.stats.migrations_in += 1
+
     def _free_pages_total(self) -> int:
         return sum(m.config.num_pages - int(m.pool.page_allocated.sum())
                    for m in self.cache.mgrs)
@@ -644,9 +761,10 @@ class ServingEngine:
                     payloads.append(p)
         # Leftover payloads of a waited multi-page job: keep for later
         # steps (their keys weren't in this step's touch set); a key
-        # whose owner retired mid-flight is wasted transfer.
+        # whose owner retired (or migrated away) mid-flight is wasted
+        # transfer.
         for key, payload in waited.items():
-            if self.host.has(*key):
+            if self.host.has(*key) and key[0] not in self._foreign:
                 self.staging.stage(key, payload)
             else:
                 self.prefetch.stats["wasted_pages"] += 1
@@ -670,9 +788,9 @@ class ServingEngine:
                 continue    # outbound gathers: settled by drain, no staging
             self.prefetch.forget(job.keys)
             for key, payload in zip(job.keys, job.payloads):
-                if self.host.has(*key):
+                if self.host.has(*key) and key[0] not in self._foreign:
                     self.staging.stage(key, payload)
-                else:           # owner retired while the DMA was in flight
+                else:   # owner retired/migrated while the DMA was in flight
                     self.prefetch.stats["wasted_pages"] += 1
                     self.stats.prefetch_wasted += 1
         self.staging.swap()
@@ -757,8 +875,11 @@ class ServingEngine:
         cached: the engine always prefills ≥ 1 real token, so the first
         output token comes from live computation (byte-identical to the
         cache-off run by construction — suffix prefill reproduces full
-        prefill bitwise; see tests/test_prefix_cache.py)."""
-        if self.prefix is None:
+        prefill bitwise; see tests/test_prefix_cache.py).
+
+        A shared (cluster) index attached to a non-dense replica never
+        matches: this engine could not replay the cached KV."""
+        if self.prefix is None or not self.prefix_supported:
             return None
         ptok = self.geo.page_tokens
         T = len(req.prompt)
@@ -852,8 +973,17 @@ class ServingEngine:
         device pool (resident pages — one batched gather that rides the
         outbound DMA lanes) or from the request's own host copies (pages
         still swapped out); a page with neither truncates the chain,
-        keeping the index prefix-closed."""
-        if self.prefix is None or self.pools is None:
+        keeping the index prefix-closed.
+
+        Non-dense fallback (DESIGN.md §10): a model family whose KV a
+        suffix prefill cannot replay bitwise (MoE capacity routing, MLA
+        latents, recurrent state) must not park — a cluster-shared index
+        would hand those pages to dense replicas as unreplayable KV.
+        The park is skipped and counted instead."""
+        if self.prefix is None:
+            return
+        if not self.prefix_supported or self.pools is None:
+            self.stats.prefix_park_skipped += 1
             return
         hashes = self.prefix.chain_hashes(req.prompt)
         start = self.prefix.missing_from(hashes)
@@ -1052,6 +1182,11 @@ class ServingEngine:
                     or self.cache.seq_tokens[r.rid] >= self.max_seq - 1:
                 r.done = True
                 done_now.append(r)
+                if r.deadline_us is not None:
+                    # SLO attainment on the modeled clock, per priority
+                    # tier (DESIGN.md §10).
+                    self.stats.note_deadline(
+                        r.priority, self._clock_us <= r.deadline_us)
         for r in done_now:
             # Park the finished prompt's pages in the prefix cache before
             # the frames are freed / host copies dropped (DESIGN.md §8).

@@ -177,15 +177,23 @@ class PrefixIndex:
     """
 
     def __init__(self, store: HostPageStore, page_tokens: int,
-                 capacity_pages: int = 4096) -> None:
+                 capacity_pages: int = 4096, *,
+                 owner_start: int = -1, owner_step: int = -1) -> None:
+        """``owner_start``/``owner_step`` namespace the negative owner
+        ids this index mints — several indexes sharing one store (a
+        cluster's per-engine indexes over the shared host tier,
+        DESIGN.md §10) use disjoint arithmetic progressions so their
+        payload keys can never collide."""
         assert page_tokens >= 1 and capacity_pages >= 1
+        assert owner_start < 0 and owner_step < 0
         self.store = store
         self.page_tokens = page_tokens
         self.capacity_pages = capacity_pages
         self._pages: Dict[bytes, PrefixPage] = {}
         self._children: Dict[bytes, set] = {}
         self._tick = 0
-        self._next_owner = -1
+        self._next_owner = owner_start
+        self._owner_step = owner_step
         self.stats = {"lookups": 0, "hit_pages": 0, "parked_pages": 0,
                       "evicted_pages": 0, "reused_tokens": 0}
 
@@ -262,7 +270,7 @@ class PrefixIndex:
         page = PrefixPage(chain_hash=chain_hash, page_index=page_index,
                           owner=self._next_owner, shard=shard, vpn=vpn,
                           parent=parent, tick=self._tick)
-        self._next_owner -= 1
+        self._next_owner += self._owner_step
         self._pages[chain_hash] = page
         if parent is not None:
             self._children.setdefault(parent, set()).add(chain_hash)

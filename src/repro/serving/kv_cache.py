@@ -178,6 +178,15 @@ class ShardedKVCache:
                         out.append((seq, s, vpn, ppn))
         return out
 
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages a fresh en-masse allocation of ``n_tokens`` consumes
+        (whole frames — CoCoA's reservation granularity).  Used by the
+        cluster router's steal guard to size a migration target without
+        touching the destination pool (DESIGN.md §10)."""
+        ftok = self.geo.frame_pages * self.geo.page_tokens
+        frames = (n_tokens + ftok - 1) // ftok
+        return frames * self.geo.frame_pages
+
     def resident_page_count(self, seq: int) -> int:
         """HBM-resident pages mapped by ``seq`` (the eviction-cost term
         of the engine's cost-aware victim score)."""

@@ -1,0 +1,215 @@
+"""Deadline-aware request router + work-stealing migration (DESIGN.md §10).
+
+The cluster front door: requests are submitted to the router, not to an
+engine.  Each router step runs three phases:
+
+1. **Dispatch** — pending requests are assigned to engines.  Under the
+   default ``policy="slack"`` the pending set is ordered highest
+   priority first, tightest deadline first within a tier (deadline-free
+   requests last, FIFO — the same rank the engines' own admission loops
+   use, so the cluster and the engine agree about who is urgent), and
+   each request goes to the least-loaded engine at that moment.
+   ``policy="fifo"`` keeps arrival order and round-robins engines — the
+   baseline the ``cluster`` bench compares SLO attainment against.
+2. **Step** — every engine with work runs one
+   :meth:`~repro.serving.engine.ServingEngine.step`.  Afterwards the
+   engines' modeled µs clocks are synced to the cluster maximum: the
+   cluster has *one* wall clock, so deadlines and slack mean the same
+   thing on every replica (the sync only moves idle clocks forward —
+   it never rewinds, and it never touches model state, so tokens are
+   unaffected).
+3. **Steal** — if an engine holds preempted requests it cannot resume
+   (batch full, or no pool headroom) while another engine has spare
+   batch slots *and* enough free pages, the best resume candidate
+   (priority, then slack) migrates: the source engine exports its pure
+   host-side bundle (Request + decode state + saved token count), the
+   shared tier re-leases the request's host frames to the destination
+   domain (whole-frame owner flips when exclusive — zero copies), and
+   the destination imports it into its resume queue.  The request then
+   faults in through the destination's own DMA lanes and continues
+   decoding — **no re-prefill, no device-to-device copy**, only
+   host-resident base pages changing hands: the paper's "no costly base
+   page migration", lifted to the cluster.
+
+Migration requires the shared host tier (without it the payload bytes
+live in the source engine's private store); the router degrades to
+dispatch-only when ``tier`` is None.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class RouterStats:
+    submitted: int = 0
+    dispatched: Dict[int, int] = dataclasses.field(default_factory=dict)
+    migrations: int = 0
+    migrated_pages: int = 0
+    steal_rounds: int = 0            # steal scans that found a candidate
+
+
+class RequestRouter:
+    def __init__(self, engines: List[ServingEngine], *, tier=None,
+                 policy: str = "slack", migrate: bool = True) -> None:
+        assert policy in ("slack", "fifo"), policy
+        assert engines
+        self.engines = engines
+        self.tier = tier
+        self.policy = policy
+        # Work stealing needs the shared tier: the bundle is host-side
+        # state, and the payload bytes must be visible to the thief.
+        self.migrate = migrate and tier is not None
+        self.pending: List[Tuple[int, Request]] = []    # (arrival, req)
+        self._arrival = itertools.count()
+        self._rr = 0                                    # fifo round-robin
+        self._owner: Dict[int, int] = {}                # rid → engine idx
+        self.stats = RouterStats()
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, req: Request, engine: Optional[int] = None) -> None:
+        """Queue a request for dispatch; ``engine`` pins it to a replica
+        (benches use this to construct controlled scenarios)."""
+        assert req.rid not in self._owner \
+            and all(r.rid != req.rid for _, r in self.pending), \
+            f"rid {req.rid} already routed (cluster rids must be unique)"
+        self.stats.submitted += 1
+        if engine is not None:
+            self._assign(req, engine)
+        else:
+            self.pending.append((next(self._arrival), req))
+
+    def _assign(self, req: Request, idx: int) -> None:
+        self._owner[req.rid] = idx
+        self.engines[idx].submit(req)
+        self.stats.dispatched[idx] = self.stats.dispatched.get(idx, 0) + 1
+
+    # ------------------------------------------------------------- dispatch
+
+    @staticmethod
+    def engine_load(eng: ServingEngine) -> int:
+        """Outstanding-work estimate in page-ish units: remaining decode
+        tokens of admitted/preempted requests plus prompt pages + decode
+        tokens of the still-queued.  Deterministic and cheap — the
+        router only needs a consistent ordering, not a perf model."""
+        ptok = max(eng.geo.page_tokens, 1)
+        load = 0
+        for r in list(eng.active) + list(eng.preempted):
+            load += max(r.max_new - len(r.out), 1)
+        for r in eng.queue:
+            load += len(r.prompt) // ptok + max(r.max_new - len(r.out), 1)
+        return load
+
+    def _rank(self, item: Tuple[int, Request]):
+        arrival, r = item
+        deadline = r.deadline_us if r.deadline_us is not None \
+            else float("inf")
+        return (-r.priority, deadline, arrival)
+
+    def dispatch(self) -> None:
+        if not self.pending:
+            return
+        if self.policy == "slack":
+            order = sorted(self.pending, key=self._rank)
+            for _, req in order:
+                idx = min(range(len(self.engines)),
+                          key=lambda i: (self.engine_load(self.engines[i]),
+                                         i))
+                self._assign(req, idx)
+        else:                           # fifo: arrival order, round-robin
+            for _, req in sorted(self.pending):
+                self._assign(req, self._rr)
+                self._rr = (self._rr + 1) % len(self.engines)
+        self.pending.clear()
+
+    # ------------------------------------------------------------- stepping
+
+    def _busy(self, eng: ServingEngine) -> bool:
+        return bool(eng.queue or eng.active or eng.preempted)
+
+    def step(self) -> bool:
+        self.dispatch()
+        progressed = False
+        for eng in self.engines:
+            if self._busy(eng):
+                progressed = bool(eng.step()) or progressed
+        # One cluster wall clock: idle replicas' modeled clocks advance
+        # with the busy ones, so slack/deadlines agree everywhere.
+        now = max(e._clock_us for e in self.engines)
+        for e in self.engines:
+            e._clock_us = max(e._clock_us, now)
+        if self.migrate:
+            self._steal()
+        return progressed or bool(self.pending)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while (self.pending or any(self._busy(e) for e in self.engines)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        for e in self.engines:
+            if e.fault_mode == "async" and not self._busy(e):
+                # Settle transfers still riding the channels (same rule
+                # as ServingEngine.run_until_drained).
+                e._clock_us = max(e._clock_us, e.dma.busy_until())
+                e._drain_prefetches()
+        return steps
+
+    # --------------------------------------------------------- work stealing
+
+    def _src_blocked(self, src: ServingEngine, pages_needed: int) -> bool:
+        """Can ``src`` NOT resume this request itself right now?  Only
+        then is stealing worth it — otherwise the local resume is
+        strictly cheaper (no lease moves, warm prefetch state) and
+        stealing would just ping-pong the request."""
+        if len(src.active) >= src.max_batch:
+            return True
+        return src._free_pages_total() < \
+            pages_needed + len(src.active) + 2
+
+    def _dst_fits(self, dst: ServingEngine, pages_needed: int) -> bool:
+        if len(dst.active) + len(dst.queue) + len(dst.preempted) \
+                >= dst.max_batch:
+            return False
+        return dst._free_pages_total() >= \
+            pages_needed + len(dst.active) + 2
+
+    def _steal(self) -> None:
+        """At most one migration per router step (keeps the schedule
+        deterministic and easy to reason about; pressure that persists
+        steals again next step)."""
+        dsts = sorted(self.engines,
+                      key=lambda e: (self.engine_load(e), e.engine_id))
+        for dst in dsts:
+            for src in sorted(self.engines,
+                              key=lambda e: (-self.engine_load(e),
+                                             e.engine_id)):
+                if src is dst or not src.preempted:
+                    continue
+                for cand in src._resume_candidates():
+                    pages = src.cache.pages_needed(
+                        src._saved_tokens[cand.rid])
+                    if not self._src_blocked(src, pages):
+                        continue
+                    if not self._dst_fits(dst, pages):
+                        continue
+                    self._migrate(cand.rid, src, dst)
+                    self.stats.steal_rounds += 1
+                    return
+
+    def _migrate(self, rid: int, src: ServingEngine,
+                 dst: ServingEngine) -> None:
+        bundle = src.export_preempted(rid)
+        assert bundle is not None
+        moved = self.tier.migrate_seq(rid, dst.engine_id)
+        dst.import_preempted(bundle)
+        self._owner[rid] = self.engines.index(dst)
+        self.stats.migrations += 1
+        self.stats.migrated_pages += moved

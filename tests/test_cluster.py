@@ -1,0 +1,373 @@
+"""Cluster serving tier tests (DESIGN.md §10).
+
+Covers the host-tier frame leases (single-domain-per-frame, whole-frame
+recycling, migration owner flips), the shared-store views, cross-engine
+prefix sharing, the deadline-aware router's dispatch order, SLO
+deadline accounting, work-stealing migration (zero re-prefill, token
+identity across engine counts), and the MoE/MLA park fallback.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.serving.cluster import (HostFrameTable, ServingCluster,
+                                   SharedHostTier, aggregate_engine_stats)
+from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.host_tier import HostPageStore, PrefixIndex
+
+GEO = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
+PTOK = GEO.page_tokens
+
+
+def _payload(tag: float = 0.0):
+    return (np.full((1, PTOK, 1, 4), tag, np.float32),
+            np.full((1, PTOK, 1, 4), -tag, np.float32))
+
+
+# --------------------------------------------------------- frame leases
+
+
+def test_frame_table_single_domain_per_frame():
+    ft = HostFrameTable(frame_pages=4)
+    for vpn in range(5):                       # domain 0: 5 pages, 2 frames
+        ft.place(0, (1, 0, vpn))
+    f_other = ft.place(1, (2, 0, 0))           # domain 1: own frame,
+    assert len(ft) == 3                        # despite free slots above
+    assert ft.owner_of((2, 0, 0)) == 1
+    assert ft.owner_of((1, 0, 4)) == 0
+    assert {ft.owner_of((1, 0, v)) for v in range(5)} == {0}
+    assert f_other not in {ft._key_frame[(1, 0, v)] for v in range(5)}
+    ft.check_invariants()
+    # rid collision across domains is an error, not silent sharing.
+    with pytest.raises(AssertionError):
+        ft.place(1, (1, 0, 0))
+
+
+def test_frame_table_whole_frame_recycle():
+    ft = HostFrameTable(frame_pages=2)
+    ft.place(0, (1, 0, 0))
+    ft.place(0, (1, 0, 1))
+    assert len(ft) == 1
+    ft.release((1, 0, 0))
+    ft.release((1, 0, 1))
+    assert len(ft) == 0 and ft.stats["frames_recycled"] == 1
+    # The recycled frame is reusable by a *different* domain (it was
+    # returned whole, so no mixing can occur).
+    f = ft.place(7, (9, 0, 0))
+    assert f == 0 and ft.owner_of((9, 0, 0)) == 7
+    ft.check_invariants()
+
+
+def test_frame_table_migrate_flips_exclusive_frames():
+    ft = HostFrameTable(frame_pages=2)
+    a = [(1, 0, 0), (1, 0, 1)]                 # fills one frame exactly
+    b = [(2, 0, 0)]                            # shares its frame with c
+    c = [(3, 0, 0)]
+    for k in a + b + c:
+        ft.place(0, k)
+    moved = ft.migrate(a + b, dst=1)
+    assert moved == 3
+    # a's frame flipped owner without re-placement; b was re-placed out
+    # of the frame it shared with (non-migrating) c.
+    assert ft.stats["whole_frame_moves"] == 1
+    assert ft.stats["page_moves"] == 1
+    assert {ft.owner_of(k) for k in a + b} == {1}
+    assert ft.owner_of(c[0]) == 0
+    assert ft._key_frame[b[0]] != ft._key_frame[c[0]]
+    ft.check_invariants()
+
+
+def test_shared_tier_views_share_payloads_not_frames():
+    tier = SharedHostTier(GEO, n_engines=2)
+    v0, v1 = tier.view(0), tier.view(1)
+    v0.put(1, 0, 0, *_payload(1.0))
+    v1.put(2, 0, 0, *_payload(2.0))
+    # Both engines see both payloads (the shared store)...
+    assert v0.has(2, 0, 0) and v1.has(1, 0, 0)
+    # ...but the pages sit in frames of their own domains.
+    assert tier.frames.owner_of((1, 0, 0)) == 0
+    assert tier.frames.owner_of((2, 0, 0)) == 1
+    tier.check_invariants()
+    # pop / drop_seq release the leases.
+    v1.pop(2, 0, 0)
+    assert tier.frames.owner_of((2, 0, 0)) is None
+    assert v0.drop_seq(1) == 1
+    assert len(tier.frames) == 0
+
+
+def test_per_engine_prefix_indexes_never_collide_owners():
+    tier = SharedHostTier(GEO, n_engines=2, share_prefix=False)
+    toks = np.arange(2 * PTOK, dtype=np.int32)
+    for i in range(2):
+        idx = tier.prefix_for(i)
+        parent = None
+        for j, h in enumerate(idx.chain_hashes(toks)):
+            idx.park(h, parent, j, 0, j, *_payload(i))
+            parent = h
+    owners0 = {p.owner for p in tier.prefix_for(0)._pages.values()}
+    owners1 = {p.owner for p in tier.prefix_for(1)._pages.values()}
+    assert not owners0 & owners1
+    # Same (shard, vpn) pages, two indexes, one store: 4 payloads.
+    assert len(tier.store) == 4
+    tier.check_invariants()
+
+
+# ------------------------------------------------------------- cluster
+
+
+def _shared_prefix_reqs(cfg, n, shared_tokens=24, suffix_tokens=8,
+                        max_new=3, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_tokens).astype(np.int32)
+    return [Request(rid=i, tenant=i % 2,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size,
+                                              suffix_tokens)
+                         .astype(np.int32)]),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _run_cluster(n_engines, *, share_prefix=True, n=5):
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
+                             max_batch=4, max_seq=96, seed=0,
+                             share_prefix=share_prefix,
+                             decode_window_us=1000.0)
+    reqs = _shared_prefix_reqs(cfg, n)
+    cluster.submit(reqs[0], engine=0)
+    cluster.run_until_drained(max_steps=300)
+    for r in reqs[1:]:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=600)
+    assert all(r.done for r in reqs)
+    cluster.check_invariants()
+    return cluster, {r.rid: tuple(r.out) for r in reqs}
+
+
+@pytest.fixture(scope="module")
+def cluster_runs():
+    one = _run_cluster(1)
+    two = _run_cluster(2)
+    return one, two
+
+
+def test_cluster_tokens_identical_across_engine_counts(cluster_runs):
+    (_, outs1), (_, outs2) = cluster_runs
+    assert outs1 == outs2
+
+
+def test_cluster_shared_index_hits_across_engines(cluster_runs):
+    _, (cluster, _) = cluster_runs
+    # Wave 1 ran (and parked) on replica 0 only; every replica that
+    # served wave 2 hit the shared index — including replica 1, which
+    # never saw the prefix before.
+    by_eng = [e.stats for e in cluster.engines]
+    assert by_eng[0].prefix_parked_pages > 0
+    assert by_eng[1].prefix_hits > 0
+    t = cluster.stats().totals
+    assert t.prefix_hits >= len(cluster.engines)
+    # Drained cluster holds no request-owned host pages; the index's
+    # pages persist under negative owners, leased to the prefix domain.
+    assert cluster.tier.store.request_pages() == 0
+    for key in cluster.tier.store._pages:
+        assert key[0] < 0
+        assert cluster.tier.frames.owner_of(key) is not None
+
+
+def test_cluster_requires_unique_rids():
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=2, max_batch=2,
+                             max_seq=64, seed=0)
+    r = Request(rid=0, tenant=0, prompt=np.arange(8, dtype=np.int32),
+                max_new=2)
+    cluster.submit(r, engine=0)
+    dup = Request(rid=0, tenant=1, prompt=np.arange(8, dtype=np.int32),
+                  max_new=2)
+    with pytest.raises(AssertionError):
+        cluster.submit(dup, engine=1)
+
+
+# ----------------------------------------------------------- migration
+
+
+def _run_steal(migrate):
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=2, max_batch=2,
+                             max_seq=96, seed=0, migrate=migrate,
+                             prefix_cache=False, decode_window_us=1000.0)
+    rng = np.random.default_rng(2)
+    victim = Request(rid=0, tenant=0, priority=0,
+                     prompt=rng.integers(0, cfg.vocab_size, 40)
+                     .astype(np.int32), max_new=16)
+    premium = [Request(rid=i, tenant=1, priority=2,
+                       prompt=rng.integers(0, cfg.vocab_size, 48)
+                       .astype(np.int32), max_new=10)
+               for i in range(1, 3)]
+    cluster.submit(victim, engine=0)
+    for _ in range(2):
+        cluster.step()
+    for r in premium:
+        cluster.submit(r, engine=0)
+    cluster.run_until_drained(max_steps=600)
+    assert all(r.done for r in [victim] + premium)
+    cluster.check_invariants()
+    return cluster, {r.rid: tuple(r.out) for r in [victim] + premium}
+
+
+def test_cluster_work_stealing_migrates_with_zero_reprefill():
+    steal, outs_steal = _run_steal(True)
+    stay, outs_stay = _run_steal(False)
+    assert outs_steal == outs_stay          # migration never changes tokens
+    r = steal.router.stats
+    assert r.migrations >= 1 and r.migrated_pages > 0
+    dst = steal.engines[1]
+    # The thief decoded the victim without prefilling a single token:
+    # only host-resident base pages changed hands (frame-lease moves +
+    # fault-in over the thief's own DMA lanes).
+    assert dst.stats.prefill_tokens == 0
+    assert dst.stats.decode_tokens > 0
+    assert dst.stats.migrations_in >= 1
+    assert steal.engines[0].stats.migrations_out >= 1
+    assert dst.stats.faults >= r.migrated_pages
+    fs = steal.tier.frames.stats
+    assert fs["whole_frame_moves"] + fs["page_moves"] > 0
+    # No stealing without migration enabled.
+    assert stay.router.stats.migrations == 0
+    assert stay.engines[1].stats.decode_tokens == 0
+
+
+# ------------------------------------------------------------- routing
+
+
+def test_router_slack_dispatch_prefers_idle_engine():
+    cfg = get_smoke_config("qwen2.5-3b")
+    rng = np.random.default_rng(0)
+
+    def burst():
+        return [Request(rid=100 + i, tenant=1,
+                        prompt=rng.integers(0, cfg.vocab_size, 16)
+                        .astype(np.int32),
+                        max_new=4, deadline_us=9000.0) for i in range(2)]
+
+    for policy, expect_idle in (("slack", True), ("fifo", False)):
+        cluster = ServingCluster(cfg, geometry=GEO, n_engines=2,
+                                 max_batch=2, max_seq=96, seed=0,
+                                 router_policy=policy, migrate=False)
+        for i in range(3):                  # load replica 0's queue
+            cluster.submit(Request(rid=i, tenant=0,
+                                   prompt=np.arange(16, dtype=np.int32),
+                                   max_new=12), engine=0)
+        for r in burst():
+            cluster.submit(r)
+        cluster.router.dispatch()
+        on_idle = [r.rid for r in cluster.engines[1].queue]
+        if expect_idle:
+            assert sorted(on_idle) == [100, 101], \
+                "slack dispatch must route the burst to the idle replica"
+        else:
+            assert len(on_idle) < 2, \
+                "fifo round-robin splits the burst regardless of load"
+
+
+def test_router_rank_orders_priority_then_slack():
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=1, max_batch=2,
+                             max_seq=64, seed=0)
+    mk = lambda rid, pri, dl: Request(
+        rid=rid, tenant=0, prompt=np.arange(8, dtype=np.int32),
+        max_new=2, priority=pri, deadline_us=dl)
+    items = [(i, r) for i, r in enumerate([
+        mk(0, 0, None), mk(1, 0, 1200.0), mk(2, 1, None),
+        mk(3, 0, 500.0), mk(4, 1, 800.0)])]
+    order = [r.rid for _, r in sorted(items, key=cluster.router._rank)]
+    assert order == [4, 2, 3, 1, 0]
+
+
+# ------------------------------------------------- deadline accounting
+
+
+def test_engine_stats_deadline_accounting_and_summary():
+    s = EngineStats(decode_steps=1, decode_tokens=1, wall_s=1.0)
+    assert s.slo_attainment() is None       # no SLOs ≠ all SLOs met
+    s.note_deadline(1, True)
+    s.note_deadline(1, True)
+    s.note_deadline(0, False)
+    assert s.slo_attainment() == pytest.approx(2 / 3)
+    assert s.slo_attainment(1) == 1.0 and s.slo_attainment(0) == 0.0
+    line = s.summary()
+    assert "SLO 66.7% (t1 2/2, t0 0/1)" in line
+    assert "SLO" not in EngineStats().summary()
+
+
+def test_engine_records_deadline_hits_and_misses():
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                        manager_kind="mosaic", seed=0,
+                        decode_window_us=1000.0, prefix_cache=False)
+    hit = Request(rid=0, tenant=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new=2, priority=1, deadline_us=1e9)
+    miss = Request(rid=1, tenant=0, prompt=np.arange(8, dtype=np.int32),
+                   max_new=2, priority=0, deadline_us=1e-3)
+    for r in (hit, miss):
+        eng.submit(r)
+    eng.run_until_drained(max_steps=100)
+    assert eng.stats.deadline_hits == {1: 1}
+    assert eng.stats.deadline_misses == {0: 1}
+
+
+def test_cluster_stats_aggregation():
+    a, b = EngineStats(), EngineStats()
+    a.faults, b.faults = 3, 4
+    a.prefill_tokens, b.prefill_tokens = 10, 20
+    a.note_deadline(0, True)
+    b.note_deadline(0, False)
+    b.note_deadline(2, True)
+    agg = aggregate_engine_stats([a, b])
+    assert agg.faults == 7 and agg.prefill_tokens == 30
+    assert agg.deadline_hits == {0: 1, 2: 1}
+    assert agg.deadline_misses == {0: 1}
+    assert agg.slo_attainment() == pytest.approx(2 / 3)
+
+
+# ------------------------------------------------- MoE/MLA park fallback
+
+
+def test_moe_engine_skips_park_into_shared_index():
+    """Regression (satellite): a non-dense replica attached to a shared
+    index must never park its KV (MoE routing is batch-shape-dependent —
+    the cached pages would be unreplayable) and must never match."""
+    cfg = get_smoke_config("dbrx-132b")
+    assert cfg.family == "moe"
+    store = HostPageStore()
+    idx = PrefixIndex(store, GEO.page_tokens)
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                        manager_kind="mosaic", seed=0, prefix_index=idx)
+    assert not eng.prefix_supported and eng.prefix is idx
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    reqs = [Request(rid=i, tenant=0,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size, 6)
+                         .astype(np.int32)]), max_new=2)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=200)
+    assert all(r.done for r in reqs)
+    assert eng.stats.prefix_park_skipped == 3      # one per completion
+    assert eng.stats.prefix_hits == 0 and len(idx) == 0
+    assert len(store) == 0                         # nothing unreplayable
+    assert "parks skipped 3" in eng.stats.summary()
+
+
+def test_mla_config_is_prefix_incompatible():
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    assert cfg.mla is not None
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=1, max_seq=32,
+                        manager_kind="mosaic", seed=0)
+    # MLA caches latents, not K/V — no index is built, and a shared one
+    # would be skip-counted (prefix_supported gates both paths).
+    assert not eng.prefix_supported and eng.prefix is None
