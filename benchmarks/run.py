@@ -15,6 +15,7 @@ Suites:
   overlap  sync vs async double-buffered fault-in + link contention (§7)
   prefix-reuse  content-hash prefix cache + full-duplex DMA (§8)
   cluster  shared host tier + deadline router + migration (§10)
+  spill    disk spill tier + write-back back-pressure     (§11)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -108,6 +109,8 @@ def main(argv=None):
                     help="smaller traces (CI)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--engines", type=int, default=2,
+                    help="cluster width for the spill suite")
     args = ap.parse_args(argv)
     n = 2000 if args.fast else 4000
 
@@ -142,6 +145,10 @@ def main(argv=None):
             + serving_bench.cluster_router_compare()
             + serving_bench.cluster_migration_compare()
             + serving_bench.cluster_sim_compare(n_access=n // 2)),
+        "spill": lambda: (
+            serving_bench.spill_compare(n_engines=args.engines)
+            + serving_bench.spill_backpressure_compare()
+            + serving_bench.spill_sim_compare(n_access=n // 2)),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

@@ -66,6 +66,26 @@ Cluster tier (DESIGN.md §10):
   per-engine links remove cross-engine link contention, the shared host
   store re-serializes transfers on its DRAM lanes, and widening
   ``host_lanes`` relieves it.
+
+Spill tier (DESIGN.md §11):
+
+* ``spill_compare`` — the host tier under a hard ``capacity_frames``
+  cap, spill on vs off, on a grouped-prefix two-wave workload that
+  overflows the cap.  With spill on, LRU prefix frames ride the "out"
+  DMA lanes to frame-granular disk files and promote back on wave-2
+  touches, so every wave-2 admission is still a prefix hit and pays
+  only a modeled promote stall; with spill off the same frames are
+  hard-evicted through the prefix index, wave 2 re-prefills the full
+  prompt, and p99 admission latency jumps.  Tokens byte-identical
+  either way — the spill tier is pure memory management.
+* ``spill_backpressure_compare`` — a saturated write-back buffer
+  (1-deep queue, slow disk) makes ``park_allowed()`` go False: new
+  prefix parks are *refused* (``prefix_park_refused``) instead of
+  queueing unboundedly, and the queue never exceeds its bound.
+* ``spill_sim_compare`` — the TLB simulator's disk model: capacity
+  writebacks stream host→disk after their link transfer; the disk is an
+  order of magnitude slower than the link, so one lane queues evictions
+  (``disk_contention_cycles``) and a second lane relieves them.
 """
 
 from __future__ import annotations
@@ -795,4 +815,208 @@ def cluster_sim_compare(n_access: int = 2000) -> List[Dict]:
                  "claim_cluster_host_lanes_relieve_shared_store":
                      bool(res["2-engines-shared-host"][1]
                           > res["2-engines-wide-host"][1])})
+    return rows
+
+
+# ------------------------------------------------------------ spill tier
+
+
+def _grouped_prefix_reqs(cfg, *, n_groups=4, per_group=3, shared_tokens=40,
+                         suffix_tokens=8, max_new=4, seed=0):
+    """``n_groups`` distinct shared prefixes, ``per_group`` requests
+    each.  Returned grouped so callers can wave-split: one request per
+    group parks its prefix, the rest readmit against a warm index."""
+    rng = np.random.default_rng(seed)
+    groups, rid = [], 0
+    for _ in range(n_groups):
+        shared = rng.integers(0, cfg.vocab_size,
+                              shared_tokens).astype(np.int32)
+        group = []
+        for _ in range(per_group):
+            suf = rng.integers(0, cfg.vocab_size,
+                               suffix_tokens).astype(np.int32)
+            group.append(Request(rid=rid, tenant=rid % 3,
+                                 prompt=np.concatenate([shared, suf]),
+                                 max_new=max_new))
+            rid += 1
+        groups.append(group)
+    return groups
+
+
+def run_spill_cluster(spill: bool, *, capacity_frames: int = 3,
+                      n_engines: int = 2, n_groups: int = 4,
+                      per_group: int = 3):
+    """Two-wave grouped-prefix workload under a hard host-frame cap.
+
+    Wave 1 (one request per group) parks every group's prefix; with
+    4 groups x 5 pages in 4-page frames the parked set overflows
+    ``capacity_frames``, so the LRU groups either spill to disk
+    (``spill=True``) or are hard-evicted through the prefix index
+    (``spill=False``).  Wave 2 readmits every group; per-engine
+    ``admit_lat_us`` sample counts are snapshotted between the waves so
+    the caller can take a wave-2-only p99.
+    """
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
+                             max_batch=4, max_seq=128, seed=0,
+                             capacity_frames=capacity_frames, spill=spill,
+                             decode_window_us=1000.0)
+    groups = _grouped_prefix_reqs(cfg, n_groups=n_groups,
+                                  per_group=per_group)
+    wave1 = [g[0] for g in groups]
+    wave2 = [r for g in groups for r in g[1:]]
+    for r in wave1:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=1000)
+    starts = [len(e.stats.admit_lat_us) for e in cluster.engines]
+    for r in wave2:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=2000)
+    assert all(r.done for r in wave1 + wave2), "spill workload not drained"
+    cluster.check_invariants()
+    wave2_lat = [x for e, s in zip(cluster.engines, starts)
+                 for x in e.stats.admit_lat_us[s:]]
+    return cluster, wave1 + wave2, wave2_lat
+
+
+def spill_compare(n_engines: int = 2) -> List[Dict]:
+    """Spill-to-disk vs hard-capped eviction under the same frame cap.
+
+    Claims: (a) tokens byte-identical spill on/off (the disk tier is
+    transparent memory management); (b) spill keeps the wave-2 prefix
+    hit rate strictly higher — spilled frames promote back instead of
+    being dropped; (c) wave-2 p99 admission latency (modeled: prefill
+    compute at ``prefill_us_per_token`` + promote stalls) is strictly
+    lower with spill — a ~200-600 us disk promote beats re-prefilling a
+    48-token prompt.
+    """
+    rows = []
+    outs, rates, p99s, clusters = {}, {}, {}, {}
+    for mode, spill in (("spill", True), ("hard-cap", False)):
+        cluster, reqs, wave2_lat = run_spill_cluster(
+            spill, n_engines=n_engines)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        clusters[mode] = cluster
+        cs = cluster.stats()
+        t = cs.totals
+        rates[mode] = cs.prefix_hit_rate()
+        p99s[mode] = float(np.percentile(wave2_lat, 99)) \
+            if wave2_lat else 0.0
+        tier = cluster.tier
+        rows.append({
+            "bench": "spill", "mode": mode, "engines": n_engines,
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "prefix_hits": t.prefix_hits,
+            "prefix_misses": t.prefix_misses,
+            "hit_rate": round(rates[mode], 3),
+            "prefill_tokens": t.prefill_tokens,
+            "spilled_frames": tier.stats["spilled_frames"],
+            "promoted_frames": tier.stats["promoted_frames"],
+            "hard_evicted_pages": tier.stats["hard_evicted_pages"],
+            "promote_stall_us": round(t.promote_stall_us, 1),
+            "spill_dma_jobs": (tier.wb_dma.stats["spill_jobs"]
+                               if tier.spill_enabled else 0),
+            "admit_p99_wave2_us": round(p99s[mode], 1),
+            "host_frames_peak": tier.frames.stats["peak_frames"],
+        })
+    st_on = clusters["spill"].tier.stats
+    identical = outs["spill"] == outs["hard-cap"]
+    # The comparison is meaningful only if the cap actually bit on both
+    # sides: frames went to disk with spill on, pages were dropped with
+    # spill off.
+    cap_bit = (st_on["spilled_frames"] > 0
+               and st_on["promoted_frames"] > 0
+               and clusters["hard-cap"].tier.stats["hard_evicted_pages"]
+               > 0)
+    rows.append({"bench": "spill", "mode": "CLAIM",
+                 "claim_spill_tokens_identical": identical,
+                 "claim_spill_higher_hit_rate":
+                     bool(cap_bit and rates["spill"] > rates["hard-cap"]),
+                 "claim_spill_lower_admit_p99":
+                     bool(cap_bit and p99s["spill"] < p99s["hard-cap"])})
+    assert identical, "disk spill tier changed model outputs!"
+    return rows
+
+
+def spill_backpressure_compare() -> List[Dict]:
+    """Write-back saturation → refuse-park back-pressure.
+
+    A 1-deep write-back queue over a deliberately slow disk (2 ms/page:
+    one frame takes ~8 decode windows to persist) saturates while the
+    first spill is still in flight, so later over-cap prefix parks are
+    refused outright — the tier sheds cache-insert load instead of
+    queueing unboundedly — and the queue depth never exceeds its bound.
+    Refused parks only cost future hits; tokens are unaffected.
+    """
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=2,
+                             max_batch=4, max_seq=128, seed=0,
+                             capacity_frames=2, wb_queue_frames=1,
+                             disk_write_us_per_page=2000.0,
+                             decode_window_us=1000.0)
+    groups = _grouped_prefix_reqs(cfg, n_groups=5, per_group=1, seed=3)
+    reqs = [g[0] for g in groups]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=2000)
+    assert all(r.done for r in reqs), "backpressure workload not drained"
+    cluster.tier.flush()        # persist the still-in-flight write-back
+    cluster.check_invariants()
+    t = cluster.stats().totals
+    tier = cluster.tier
+    rows = [{
+        "bench": "spill-backpressure", "mode": "wb-queue-1",
+        "parked_pages": t.prefix_parked_pages,
+        "parks_refused": t.prefix_park_refused,
+        "spilled_frames": tier.stats["spilled_frames"],
+        "wb_peak_depth": tier.stats["wb_peak_depth"],
+        "wb_queue_frames": tier.wb_queue_frames,
+    }]
+    rows.append({"bench": "spill-backpressure", "mode": "CLAIM",
+                 "claim_spill_backpressure_refuses_parks":
+                     bool(t.prefix_park_refused >= 1
+                          and tier.stats["spilled_frames"] >= 1
+                          and tier.stats["wb_peak_depth"]
+                          <= tier.wb_queue_frames)})
+    return rows
+
+
+def spill_sim_compare(n_access: int = 2000,
+                      hbm_pages: int = 192) -> List[Dict]:
+    """Capacity writebacks hitting the disk in the TLB simulator.
+
+    Same capped setting as ``duplex_sim_compare``, with the disk
+    modeled: each writeback streams host→disk after its link transfer
+    at ``disk_cycles_per_page`` (~an order of magnitude over the link's
+    per-page cost), so evictions queue at a single disk lane; a second
+    lane relieves the backlog.
+    """
+    from repro.core.tlb_sim import SimConfig, TranslationSim
+    from repro.core.workloads import build_workload, homogeneous_names
+
+    names = homogeneous_names("dct", 3)
+    traces, _ = build_workload(names, "mosaic", seed=0, n_access=n_access)
+    rows = []
+    res = {}
+    for disk_lanes in (1, 2):
+        sim = TranslationSim(
+            SimConfig(mode="mosaic", paging=True, dma_channels=1,
+                      duplex=True, hbm_pages_per_app=hbm_pages,
+                      disk_lanes=disk_lanes), traces)
+        sim.run()
+        res[disk_lanes] = sim.link.disk_contention_total()
+        rows.append({
+            "bench": "spill-sim", "disk_lanes": disk_lanes,
+            "writebacks": sim.link.writebacks,
+            "disk_writebacks": sim.link.disk_writebacks,
+            "disk_busy_cycles": round(sim.link.disk_busy_cycles, 1),
+            "disk_contention_cycles": round(res[disk_lanes], 1),
+        })
+    rows.append({"bench": "spill-sim", "disk_lanes": "CLAIM",
+                 "claim_spill_disk_lanes_relieve_writeback":
+                     bool(res[1] > 0 and res[2] < res[1])})
     return rows

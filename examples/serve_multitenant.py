@@ -30,6 +30,14 @@ prefix parked by one replica hit on every other, and work stealing
 migrates preempted requests between replicas through host-frame leases
 (zero re-prefill).  Outputs stay byte-identical to the 1-engine run.
 
+With ``--capacity-frames N`` (cluster mode) host DRAM itself is bounded
+to N frames and the disk spill tier opens underneath (DESIGN.md §11):
+LRU frames ride the outbound DMA lanes into frame-granular disk files
+and promote back on touch; ``--no-spill`` switches to the hard-capped
+baseline that drops over-cap prefix frames through the index instead.
+Tokens are byte-identical in every configuration — watch the ``spill``
+line of the cluster summary.
+
     PYTHONPATH=src python examples/serve_multitenant.py --requests 10
     PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
         --oversubscribe 2
@@ -37,6 +45,8 @@ migrates preempted requests between replicas through host-frame leases
         --shared-prefix 40
     PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
         --shared-prefix 40 --engines 2
+    PYTHONPATH=src python examples/serve_multitenant.py --requests 12 \
+        --shared-prefix 40 --engines 2 --capacity-frames 4
 """
 
 import argparse
@@ -52,7 +62,7 @@ from repro.serving.engine import Request, ServingEngine
 def run(manager_kind: str, n_requests: int, seed: int,
         oversubscribe: float = 1.0, fault_mode: str = "async",
         shared_prefix: int = 0, prefix_cache: bool = True,
-        n_engines: int = 1):
+        n_engines: int = 1, capacity_frames=None, spill: bool = True):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
     if n_engines > 1:
@@ -60,7 +70,8 @@ def run(manager_kind: str, n_requests: int, seed: int,
             cfg, geometry=geo, n_engines=n_engines, max_batch=4,
             max_seq=128, manager_kind=manager_kind, seed=seed,
             oversubscription=oversubscribe, fault_mode=fault_mode,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache,
+            capacity_frames=capacity_frames, spill=spill)
         eng = cluster            # same submit/run_until_drained surface
     else:
         cluster = None
@@ -117,7 +128,18 @@ def main():
     ap.add_argument("--engines", type=int, default=1,
                     help="serving-engine replicas over one shared host "
                          "tier (cluster tier + router, DESIGN.md §10)")
+    ap.add_argument("--capacity-frames", type=int, default=None,
+                    help="bound host DRAM to this many frames and open "
+                         "the disk spill tier underneath (DESIGN.md §11; "
+                         "cluster mode only)")
+    ap.add_argument("--no-spill", action="store_true",
+                    help="with --capacity-frames: hard-cap baseline — "
+                         "evict over-cap prefix frames instead of "
+                         "spilling them to disk")
     args = ap.parse_args()
+    if args.capacity_frames is not None and args.engines < 2:
+        ap.error("--capacity-frames needs --engines >= 2 (the bounded "
+                 "host tier is a cluster feature)")
 
     results = {}
     for kind in ("mosaic", "gpu-mmu"):
@@ -125,7 +147,9 @@ def main():
                                args.oversubscribe, args.fault_mode,
                                shared_prefix=args.shared_prefix,
                                prefix_cache=not args.no_prefix_cache,
-                               n_engines=args.engines)
+                               n_engines=args.engines,
+                               capacity_frames=args.capacity_frames,
+                               spill=not args.no_spill)
         if args.engines > 1:
             cluster_stats = eng.stats()
             s = cluster_stats.totals

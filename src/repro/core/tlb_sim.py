@@ -100,6 +100,17 @@ class SimConfig:
     # host store unmodeled (pre-cluster behavior, and the default).
     n_engines: int = 1
     host_lanes: int = 0
+    # Disk spill tier under the host store (DESIGN.md §11): each outbound
+    # writeback, after its link transfer, streams from host DRAM to disk
+    # on one of `disk_lanes` lanes at `disk_cycles_per_page` occupancy
+    # (amortized by fault_amortize like every other per-page cost).
+    # Disk is ~an order of magnitude slower than the link, so a burst of
+    # evictions queues at the disk — the write-back back-pressure the
+    # serving tier's bounded buffer models; `disk_contention_cycles`
+    # measures exactly that queueing.  disk_lanes=0 leaves the disk
+    # unmodeled (the default, pre-§11 behavior).
+    disk_lanes: int = 0
+    disk_cycles_per_page: float = 4000.0
     clock_ghz: float = 1.02          # shader clock (Table 1: 1020 MHz)
     link: LinkModel = dataclasses.field(default_factory=LinkModel)
     # Page-size mode: "mosaic" uses per-frame coalesced bits from the
@@ -222,6 +233,10 @@ class Link:
         # both directions, must also book one (host DRAM bandwidth is
         # direction-agnostic).  Empty list = unmodeled.
         self._host_lanes = [0.0] * max(0, cfg.host_lanes)
+        # Disk spill lanes under the host store (DESIGN.md §11): every
+        # writeback streams on to disk after its link transfer.  Empty
+        # list = unmodeled.
+        self._disk_lanes = [0.0] * max(0, cfg.disk_lanes)
         self.faults = 0
         self.fault_cycles_total = 0.0
         self.contention_cycles = [0.0] * n_apps         # inbound, link
@@ -231,6 +246,11 @@ class Link:
         # Queueing a transfer pays at the shared host store *after* its
         # link lane is free — the cluster-tier bottleneck stat.
         self.host_contention_cycles = [0.0] * n_apps
+        # Writebacks that queued at the (slower) disk after their link
+        # transfer — the §11 write-back saturation signal.
+        self.disk_writebacks = 0
+        self.disk_busy_cycles = 0.0
+        self.disk_contention_cycles = [0.0] * n_apps
 
     @property
     def busy_until(self) -> float:
@@ -301,7 +321,25 @@ class Link:
         self.writeback_cycles_total += begin + transfer - now
         if app < len(self.contention_cycles_out):
             self.contention_cycles_out[app] += max(free_at - now, 0.0)
-        return begin + transfer
+        end = begin + transfer
+        if self._disk_lanes:
+            # §11 spill: after the link transfer lands in host DRAM the
+            # frame streams on to disk.  Disk pages cost far more than
+            # link pages, so the lane backlog — not the link — is what
+            # stalls further evictions; that wait is the back-pressure
+            # the serving tier's bounded write-back queue reacts to.
+            disk_cost = self.cfg.disk_cycles_per_page \
+                / max(1, self.cfg.fault_amortize)
+            lane = min(range(len(self._disk_lanes)),
+                       key=self._disk_lanes.__getitem__)
+            dbegin = max(end, self._disk_lanes[lane])
+            self._disk_lanes[lane] = dbegin + disk_cost
+            self.disk_writebacks += 1
+            self.disk_busy_cycles += disk_cost
+            if app < len(self.disk_contention_cycles):
+                self.disk_contention_cycles[app] += dbegin - end
+            end = dbegin + disk_cost
+        return end
 
     def contention_total(self) -> float:
         return float(sum(self.contention_cycles))
@@ -311,6 +349,9 @@ class Link:
 
     def host_contention_total(self) -> float:
         return float(sum(self.host_contention_cycles))
+
+    def disk_contention_total(self) -> float:
+        return float(sum(self.disk_contention_cycles))
 
 
 # --------------------------------------------------------------------------- traces

@@ -49,14 +49,24 @@ import dataclasses
 from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import ModelConfig, PoolGeometry
+from repro.core.demand_paging import LinkModel
+from repro.serving.dma import AsyncDMAEngine
 from repro.serving.engine import EngineStats, Request, ServingEngine
-from repro.serving.host_tier import HostPageStore, PrefixIndex
+from repro.serving.host_tier import HostPageStore, PrefixIndex, SpillStore
 from repro.serving.router import RequestRouter, RouterStats
 
 Key = Tuple[int, int, int]          # (seq, shard, local vpn)
 Domain = Hashable                   # engine id, or ("prefix", …)
 
 PREFIX_DOMAIN: Domain = "prefix"
+
+# Host-frame state machine (DESIGN.md §11).  A frame's payloads live in
+# host DRAM while HOST or PENDING_WRITE_BACK (the write-back buffer holds
+# a snapshot *reference*, not a copy — reads stay free until the frame
+# actually lands on disk) and on disk while SPILLED.
+FRAME_HOST = "host"
+FRAME_PENDING_WB = "pending_write_back"
+FRAME_SPILLED = "spilled"
 
 
 class HostFrameTable:
@@ -67,20 +77,36 @@ class HostFrameTable:
     a free slot; ``release(key)`` frees the slot and returns the frame
     whole to the free pool when it empties — so, as in CoCoA, frames
     recycle at frame granularity and never fragment across domains.
+
+    With a disk tier underneath (DESIGN.md §11) every frame also carries
+    a state — ``FRAME_HOST`` → ``FRAME_PENDING_WB`` → ``FRAME_SPILLED``
+    → (promote) ``FRAME_HOST`` — and an LRU tick refreshed by placements
+    and touches; ``capacity_frames`` is the host-DRAM bound the owning
+    :class:`SharedHostTier` enforces by spilling the LRU victim.  Only
+    ``FRAME_HOST`` frames accept placements (pending/spilled frames are
+    withdrawn from the open sets), and a spilled frame must be promoted
+    before any of its pages is released.
     """
 
-    def __init__(self, frame_pages: int) -> None:
+    def __init__(self, frame_pages: int,
+                 capacity_frames: Optional[int] = None) -> None:
         assert frame_pages >= 1
+        assert capacity_frames is None or capacity_frames >= 1
         self.frame_pages = frame_pages
+        self.capacity_frames = capacity_frames
         self._key_frame: Dict[Key, int] = {}
         self._frame_keys: Dict[int, Set[Key]] = {}
         self._frame_owner: Dict[int, Domain] = {}
         self._open: Dict[Domain, Set[int]] = {}   # leased, ≥1 free slot
         self._free: List[int] = []                # recycled frame ids
         self._next = 0
+        self._state: Dict[int, str] = {}          # leased frame → FRAME_*
+        self._frame_tick: Dict[int, int] = {}     # LRU clock per frame
+        self._tick = 0
         self.stats = {
             "frames_leased": 0, "frames_recycled": 0, "peak_frames": 0,
             "placed_pages": 0, "page_moves": 0, "whole_frame_moves": 0,
+            "spilled_frames": 0, "promoted_frames": 0, "spill_cancels": 0,
         }
 
     # ------------------------------------------------------------- queries
@@ -95,7 +121,44 @@ class HostFrameTable:
     def frames_of(self, domain: Domain) -> int:
         return sum(1 for d in self._frame_owner.values() if d == domain)
 
+    def frame_of(self, key: Key) -> Optional[int]:
+        return self._key_frame.get(key)
+
+    def keys_of(self, frame: int) -> Set[Key]:
+        return set(self._frame_keys.get(frame, ()))
+
+    def state_of(self, frame: int) -> Optional[str]:
+        return self._state.get(frame)
+
+    def resident_frames(self) -> int:
+        """Frames whose payloads occupy host DRAM (HOST + PENDING_WB)."""
+        return sum(1 for s in self._state.values() if s != FRAME_SPILLED)
+
+    def spill_victim(self, exclude: Set[int] = frozenset(),
+                     owner_ok=None) -> Optional[int]:
+        """Least-recently-touched ``FRAME_HOST`` frame outside ``exclude``
+        (``owner_ok``: optional domain predicate — the hard-capped tier
+        restricts victims to prefix-cache domains)."""
+        cands = [f for f, s in self._state.items()
+                 if s == FRAME_HOST and f not in exclude
+                 and (owner_ok is None or owner_ok(self._frame_owner[f]))]
+        if not cands:
+            return None
+        return min(cands, key=lambda f: (self._frame_tick.get(f, 0), f))
+
     # ------------------------------------------------------------- mutate
+
+    def _touch_frame(self, f: int) -> None:
+        self._tick += 1
+        self._frame_tick[f] = self._tick
+
+    def touch(self, key: Key) -> Optional[str]:
+        """Refresh the LRU tick of ``key``'s frame; returns its state."""
+        f = self._key_frame.get(key)
+        if f is None:
+            return None
+        self._touch_frame(f)
+        return self._state[f]
 
     def _lease(self, domain: Domain) -> int:
         if self._free:
@@ -106,6 +169,8 @@ class HostFrameTable:
         self._frame_owner[f] = domain
         self._frame_keys[f] = set()
         self._open.setdefault(domain, set()).add(f)
+        self._state[f] = FRAME_HOST
+        self._touch_frame(f)
         self.stats["frames_leased"] += 1
         self.stats["peak_frames"] = max(self.stats["peak_frames"],
                                         len(self._frame_owner))
@@ -124,6 +189,7 @@ class HostFrameTable:
         self._key_frame[key] = f
         if len(self._frame_keys[f]) >= self.frame_pages:
             open_frames.discard(f)
+        self._touch_frame(f)
         self.stats["placed_pages"] += 1
         return f
 
@@ -131,17 +197,58 @@ class HostFrameTable:
         f = self._key_frame.pop(key, None)
         if f is None:
             return                          # never placed (private store)
+        assert self._state[f] != FRAME_SPILLED, \
+            f"release of spilled page {key} — promote the frame first"
         keys = self._frame_keys[f]
         keys.discard(key)
         domain = self._frame_owner[f]
         if not keys:                        # whole-frame return
+            st = self._state.pop(f)
+            assert st == FRAME_HOST, \
+                f"frame {f} recycled while {st} (cancel the write-back)"
             del self._frame_keys[f]
             del self._frame_owner[f]
+            self._frame_tick.pop(f, None)
             self._open.get(domain, set()).discard(f)
             self._free.append(f)
             self.stats["frames_recycled"] += 1
-        else:
+        elif self._state[f] == FRAME_HOST:
             self._open.setdefault(domain, set()).add(f)
+
+    # ------------------------------------------------------- spill states
+
+    def mark_pending_writeback(self, f: int) -> None:
+        """HOST → PENDING_WB: the frame joins the write-back buffer and
+        stops accepting placements (it is about to leave DRAM)."""
+        assert self._state[f] == FRAME_HOST, (f, self._state[f])
+        self._state[f] = FRAME_PENDING_WB
+        self._open.get(self._frame_owner[f], set()).discard(f)
+
+    def cancel_writeback(self, f: int) -> None:
+        """PENDING_WB → HOST: a touch (or emptying) beat the disk."""
+        assert self._state[f] == FRAME_PENDING_WB, (f, self._state[f])
+        self._state[f] = FRAME_HOST
+        self._touch_frame(f)
+        if len(self._frame_keys[f]) < self.frame_pages:
+            self._open.setdefault(self._frame_owner[f], set()).add(f)
+        self.stats["spill_cancels"] += 1
+
+    def mark_spilled(self, f: int) -> None:
+        """PENDING_WB → SPILLED: the whole frame landed on disk."""
+        assert self._state[f] == FRAME_PENDING_WB, (f, self._state[f])
+        self._state[f] = FRAME_SPILLED
+        self.stats["spilled_frames"] += 1
+
+    def promote(self, f: int) -> None:
+        """SPILLED → HOST: the frame's payloads are back in DRAM."""
+        assert self._state[f] == FRAME_SPILLED, (f, self._state[f])
+        self._state[f] = FRAME_HOST
+        self._touch_frame(f)
+        if len(self._frame_keys[f]) < self.frame_pages:
+            self._open.setdefault(self._frame_owner[f], set()).add(f)
+        self.stats["promoted_frames"] += 1
+
+    # ------------------------------------------------------------ migrate
 
     def migrate(self, keys: Sequence[Key], dst: Domain) -> int:
         """Re-lease ``keys`` (one request's host pages) to ``dst``.
@@ -150,9 +257,14 @@ class HostFrameTable:
         owner — the whole-frame handoff, zero data movement even in
         host DRAM.  Pages sharing a frame with a non-migrating tenant
         are re-placed into ``dst`` frames (a host-side memcpy in the
-        model; still no device traffic).  Returns the page count.
+        model; still no device traffic).  Returns the number of pages
+        actually re-leased: keys that were never placed (stale bundle
+        entries) and keys already in ``dst`` frames don't count, so
+        migration stats never overcount.  Spilled frames must be
+        promoted before their pages migrate (the caller's job — the
+        on-disk file records a single domain).
         """
-        moving = set(keys)
+        moved = 0
         by_frame: Dict[int, List[Key]] = {}
         for k in keys:
             f = self._key_frame.get(k)
@@ -160,6 +272,8 @@ class HostFrameTable:
                 by_frame.setdefault(f, []).append(k)
         for f, ks in sorted(by_frame.items()):
             src = self._frame_owner[f]
+            assert self._state[f] != FRAME_SPILLED, \
+                f"migrating pages of spilled frame {f} — promote first"
             if src == dst:
                 continue
             if set(ks) == self._frame_keys[f]:
@@ -173,7 +287,8 @@ class HostFrameTable:
                     self.release(k)
                     self.place(dst, k)
                     self.stats["page_moves"] += 1
-        return len(moving)
+            moved += len(ks)
+        return moved
 
     # ------------------------------------------------------------- checks
 
@@ -182,13 +297,20 @@ class HostFrameTable:
             assert f in self._frame_owner, f"frame {f} leased to nobody"
             assert 0 < len(keys) <= self.frame_pages, \
                 f"frame {f} slot count {len(keys)}"
+            assert self._state.get(f) in (FRAME_HOST, FRAME_PENDING_WB,
+                                          FRAME_SPILLED), \
+                f"frame {f} in unknown state {self._state.get(f)}"
             for k in keys:
                 assert self._key_frame.get(k) == f, (k, f)
+        assert set(self._state) == set(self._frame_owner)
         for domain, frames in self._open.items():
             for f in frames:
                 assert self._frame_owner.get(f) == domain, \
                     f"open frame {f} not owned by {domain}"
                 assert len(self._frame_keys[f]) < self.frame_pages
+                # Only DRAM-resident, not-yet-queued frames accept
+                # placements (§11 state machine).
+                assert self._state[f] == FRAME_HOST, (f, self._state[f])
         # The invariant this whole class exists for: every placed page's
         # frame is leased to exactly one domain (structural here — the
         # dict can't hold two owners — but place() is the only write).
@@ -205,13 +327,23 @@ class LeasedStoreView:
     delegate to the shared store — all views see all payloads (the
     point: a prefix parked by one engine is readable by every other),
     but each *write* lands in this domain's frames only.
+
+    When the owning :class:`SharedHostTier` has a disk tier (``tier`` is
+    set, DESIGN.md §11) every access is routed through the tier's hooks:
+    reads promote spilled frames back to DRAM (promote-on-touch) and
+    refresh the LRU tick, removals cancel a pending write-back whose
+    frame they would empty, and writes trigger capacity enforcement.
+    A ``tier=None`` view behaves exactly as before — zero overhead for
+    clusters without a capacity bound.
     """
 
     def __init__(self, store: HostPageStore, frames: HostFrameTable,
-                 domain: Domain) -> None:
+                 domain: Domain, tier: "Optional[SharedHostTier]" = None
+                 ) -> None:
         self.store = store
         self.frames = frames
         self.domain = domain
+        self.tier = tier
 
     # ------------------------------------------------------------- queries
 
@@ -227,9 +359,14 @@ class LeasedStoreView:
         return self.store._pages
 
     def has(self, seq: int, shard: int, vpn: int) -> bool:
-        return self.store.has(seq, shard, vpn)
+        if self.store.has(seq, shard, vpn):
+            return True
+        return self.tier is not None \
+            and self.tier.is_spilled((seq, shard, vpn))
 
     def seq_pages(self, seq: int) -> List[Key]:
+        if self.tier is not None:
+            return self.tier.seq_pages(seq)
         return self.store.seq_pages(seq)
 
     def nbytes(self) -> int:
@@ -239,33 +376,70 @@ class LeasedStoreView:
         return self.store.request_pages()
 
     def peek(self, seq: int, shard: int, vpn: int):
+        if self.tier is not None:
+            self.tier.before_read((seq, shard, vpn))
         return self.store.peek(seq, shard, vpn)
 
     # ------------------------------------------------------------- movement
 
     def put(self, seq: int, shard: int, vpn: int, k_page, v_page, *,
             kind: str = "swap") -> None:
+        key = (seq, shard, vpn)
+        if self.tier is not None:
+            self.tier.before_write(key)
         if not self.store.has(seq, shard, vpn):
-            self.frames.place(self.domain, (seq, shard, vpn))
+            self.frames.place(self.domain, key)
         self.store.put(seq, shard, vpn, k_page, v_page, kind=kind)
+        if self.tier is not None:
+            self.tier.after_put(key)
 
     def pop(self, seq: int, shard: int, vpn: int):
+        key = (seq, shard, vpn)
+        if self.tier is not None:
+            self.tier.before_remove(key)
         kv = self.store.pop(seq, shard, vpn)
-        self.frames.release((seq, shard, vpn))
+        self.frames.release(key)
         return kv
 
     def discard(self, seq: int, shard: int, vpn: int) -> bool:
+        key = (seq, shard, vpn)
+        if self.tier is not None:
+            self.tier.before_remove(key)
         if self.store.discard(seq, shard, vpn):
-            self.frames.release((seq, shard, vpn))
+            self.frames.release(key)
             return True
         return False
 
     def drop_seq(self, seq: int) -> int:
+        if self.tier is not None:
+            # Promote the sequence's spilled frames first: a dropped key
+            # must leave the frame table, and spilled frames may hold
+            # surviving co-tenants (promote, then release normally).
+            self.tier.ensure_resident(self.tier.spilled_keys_of(seq))
         keys = self.store.seq_pages(seq)
         n = self.store.drop_seq(seq)
         for k in keys:
+            if self.tier is not None:
+                self.tier.before_remove(k)
             self.frames.release(k)
         return n
+
+    # -------------------------------------------------------- tier hooks
+    # Mirrors HostPageStore's no-op surface so engines can call these on
+    # whichever host they hold (DESIGN.md §11).
+
+    def park_allowed(self) -> bool:
+        return True if self.tier is None else self.tier.park_allowed()
+
+    def ensure_resident(self, keys, now_us: Optional[float] = None
+                        ) -> float:
+        if self.tier is None:
+            return 0.0
+        return self.tier.ensure_resident(keys, now_us)
+
+    def pump(self, now_us: float) -> None:
+        if self.tier is not None:
+            self.tier.pump(now_us)
 
     def note_swap_out(self) -> None:
         self.store.note_swap_out()
@@ -278,15 +452,76 @@ class SharedHostTier:
     """One host DRAM tier for the whole cluster: shared payload store,
     frame leases, and the prefix index (shared by default; per-engine
     indexes with disjoint owner namespaces when ``share_prefix=False``
-    — the A/B the ``cluster`` bench measures)."""
+    — the A/B the ``cluster`` bench measures).
+
+    With ``capacity_frames`` set, host DRAM is *bounded* and a third,
+    disk-backed tier opens underneath (DESIGN.md §11):
+
+    * **Spill** (``spill=True``): when DRAM-resident frames exceed the
+      bound, the LRU ``FRAME_HOST`` victim enters the write-back buffer
+      — its pages ride the outbound DMA lanes as one contiguous
+      ``kind="spill"`` job (whole frame ⇒ one descriptor), then stream
+      to disk at the modeled seek + per-page write cost.  :meth:`pump`
+      (called by every engine step with the modeled clock) persists
+      frames whose write-back completed: payloads leave the store, the
+      whole frame lands as one :class:`SpillStore` file, and the frame
+      turns ``FRAME_SPILLED``.  Any touch before persistence cancels
+      the write-back (the data never left DRAM); a touch after it
+      promotes the whole frame back synchronously, charging the
+      modeled disk-read stall to the toucher (promote-on-touch).
+      The write-back buffer is bounded (``wb_queue_frames``): while it
+      is full, :meth:`park_allowed` goes False and engines *refuse*
+      new prefix parks instead of queueing unbounded dirty data —
+      the back-pressure rule.
+    * **Hard cap** (``spill=False``, the bench baseline): over-capacity
+      prefix-cache frames are simply evicted *through* their index
+      (:meth:`PrefixIndex.evict_owner_pages` keeps index↔store
+      consistent).  Request-owned frames are never dropped — their
+      payloads are not reconstructible — so only cache hit rate pays.
+    """
 
     def __init__(self, geometry: PoolGeometry, *, n_engines: int,
                  share_prefix: bool = True,
-                 prefix_capacity_pages: int = 4096) -> None:
+                 prefix_capacity_pages: int = 4096,
+                 capacity_frames: Optional[int] = None,
+                 spill: bool = True,
+                 spill_dir: Optional[str] = None,
+                 wb_queue_frames: int = 4,
+                 wb_lanes: int = 1,
+                 disk_read_us_per_page: float = 25.0,
+                 disk_write_us_per_page: float = 25.0,
+                 disk_seek_us: float = 100.0,
+                 link: Optional[LinkModel] = None) -> None:
+        assert wb_queue_frames >= 1
         self.geo = geometry
         self.n_engines = n_engines
         self.store = HostPageStore()
-        self.frames = HostFrameTable(geometry.frame_pages)
+        self.frames = HostFrameTable(geometry.frame_pages,
+                                     capacity_frames=capacity_frames)
+        self.capacity_frames = capacity_frames
+        self.spill_enabled = spill and capacity_frames is not None
+        self.wb_queue_frames = wb_queue_frames
+        self.disk_read_us_per_page = disk_read_us_per_page
+        self.disk_write_us_per_page = disk_write_us_per_page
+        self.disk_seek_us = disk_seek_us
+        self.spill_store = SpillStore(spill_dir) if self.spill_enabled \
+            else None
+        # The write-back buffer rides its own outbound DMA lane(s) on the
+        # host link — same AsyncDMAEngine timeline model the engines use,
+        # so spill traffic is µs-accounted like every other transfer.
+        self.wb_dma = AsyncDMAEngine(link or LinkModel(),
+                                     n_channels=max(1, wb_lanes)) \
+            if self.spill_enabled else None
+        self._pending_wb: Dict[int, float] = {}   # frame → disk-ready µs
+        self._spilled: Dict[Key, int] = {}        # key → on-disk frame
+        self._now_us = 0.0
+        self.stats = {
+            "spilled_frames": 0, "spilled_pages": 0,
+            "promoted_frames": 0, "promoted_pages": 0,
+            "promote_us": 0.0, "spill_write_us": 0.0,
+            "spill_cancels": 0, "wb_peak_depth": 0,
+            "hard_evicted_pages": 0,
+        }
         self.share_prefix = share_prefix
         if share_prefix:
             self.prefix: Optional[PrefixIndex] = PrefixIndex(
@@ -306,24 +541,262 @@ class SharedHostTier:
                 for i in range(n_engines)]
 
     def view(self, domain: Domain) -> LeasedStoreView:
-        return LeasedStoreView(self.store, self.frames, domain)
+        return LeasedStoreView(self.store, self.frames, domain,
+                               tier=self if self.capacity_frames is not None
+                               else None)
 
     def prefix_for(self, engine_id: int) -> Optional[PrefixIndex]:
         if self.share_prefix:
             return self.prefix
         return self._engine_prefix[engine_id]
 
+    # -------------------------------------------------------- tier queries
+
+    def is_spilled(self, key: Key) -> bool:
+        return key in self._spilled
+
+    def spilled_keys_of(self, seq: int) -> List[Key]:
+        return sorted(k for k in self._spilled if k[0] == seq)
+
+    def seq_pages(self, seq: int) -> List[Key]:
+        """A sequence's host pages across *both* lower tiers (DRAM +
+        disk) — has/seq_pages must see spilled pages or engines would
+        treat them as lost."""
+        keys = set(self.store.seq_pages(seq))
+        keys.update(k for k in self._spilled if k[0] == seq)
+        return sorted(keys)
+
+    def park_allowed(self) -> bool:
+        """The §11 back-pressure rule: parks are refused while the
+        write-back buffer is saturated (never refused when spill is off
+        — the hard cap sheds load by evicting instead)."""
+        if not self.spill_enabled:
+            return True
+        return len(self._pending_wb) < self.wb_queue_frames
+
+    # --------------------------------------------------------- view hooks
+
+    def before_read(self, key: Key) -> None:
+        f = self._spilled.get(key)
+        if f is not None:
+            self._promote_frame(f)
+        self.frames.touch(key)
+
+    def before_write(self, key: Key) -> None:
+        f = self._spilled.get(key)
+        if f is not None:            # overwrite of a spilled page
+            self._promote_frame(f)
+
+    def before_remove(self, key: Key) -> None:
+        f = self._spilled.get(key)
+        if f is not None:
+            self._promote_frame(f)
+        f = self.frames.frame_of(key)
+        if f is not None and f in self._pending_wb \
+                and len(self.frames.keys_of(f)) == 1:
+            # The removal would empty (and recycle) a queued frame: the
+            # write-back is moot — cancel before the id is reused.
+            self._cancel_writeback(f)
+
+    def after_put(self, key: Key) -> None:
+        self.frames.touch(key)
+        f = self.frames.frame_of(key)
+        self._enforce_capacity(
+            protect=frozenset(() if f is None else (f,)))
+
+    # ------------------------------------------------------ write-back pump
+
+    def pump(self, now_us: float) -> None:
+        """Advance the tier clock; persist write-backs whose DMA + disk
+        write completed by ``now_us``, then refill the freed queue slots
+        if DRAM is still over capacity.  Engines call this every step."""
+        if self.capacity_frames is None:
+            return
+        self._now_us = max(self._now_us, float(now_us))
+        if not self.spill_enabled:
+            return
+        self.wb_dma.drain(self._now_us)
+        for f in sorted(f for f, t in self._pending_wb.items()
+                        if t <= self._now_us):
+            self._persist(f)
+        self._enforce_capacity()
+
+    def flush(self) -> None:
+        """Advance past every queued write-back and persist (tests and
+        benches settle the spill pipeline deterministically).  Persisting
+        may re-enforce the capacity bound and queue the *next* LRU victim
+        behind the now-free buffer slot, so drain until quiescent."""
+        if not self.spill_enabled:
+            return
+        while self._pending_wb:
+            self.pump(max(max(self._pending_wb.values()),
+                          self.wb_dma.busy_until()))
+
+    def _persist(self, f: int) -> None:
+        del self._pending_wb[f]
+        assert self.frames.state_of(f) == FRAME_PENDING_WB, f
+        keys = sorted(self.frames.keys_of(f))
+        pages = [(k, self.store.peek(*k)) for k in keys]
+        self.spill_store.write_frame(f, self.frames._frame_owner[f], pages)
+        for k in keys:
+            self.store.discard(*k)
+            self._spilled[k] = f
+        self.frames.mark_spilled(f)
+        self.stats["spilled_frames"] += 1
+        self.stats["spilled_pages"] += len(keys)
+
+    def _cancel_writeback(self, f: int) -> None:
+        self._pending_wb.pop(f, None)
+        self.frames.cancel_writeback(f)
+        self.stats["spill_cancels"] += 1
+
+    # --------------------------------------------------------- spill policy
+
+    def _enforce_capacity(self, protect: frozenset = frozenset()) -> None:
+        if self.capacity_frames is None:
+            return
+        if not self.spill_enabled:
+            self._hard_evict(protect)
+            return
+        busy = set(protect) | set(self._pending_wb)
+        # Queued frames are DRAM-resident but already leaving; count the
+        # still-staying frames against the bound, and stop at the
+        # write-back buffer's edge — that saturation is exactly what
+        # park_allowed() reports upward as back-pressure.
+        while (self.frames.resident_frames() - len(self._pending_wb)
+               > self.capacity_frames
+               and len(self._pending_wb) < self.wb_queue_frames):
+            f = self.frames.spill_victim(exclude=busy)
+            if f is None:
+                break
+            self._enqueue_spill(f)
+            busy.add(f)
+
+    def _enqueue_spill(self, f: int) -> None:
+        """HOST → PENDING_WB: one whole-frame gather on the outbound
+        lane (contiguous staging slots ⇒ a single DMA descriptor), then
+        the modeled disk write; :meth:`pump` persists at the ready µs."""
+        keys = sorted(self.frames.keys_of(f))
+        payloads = [self.store.peek(*k) for k in keys]
+        page_bytes = int(payloads[0][0].nbytes + payloads[0][1].nbytes)
+        job = self.wb_dma.enqueue(keys, list(range(len(keys))), page_bytes,
+                                  payloads, self._now_us, kind="spill",
+                                  direction="out")
+        self.frames.mark_pending_writeback(f)
+        self._pending_wb[f] = job.done_us + self.disk_seek_us \
+            + len(keys) * self.disk_write_us_per_page
+        self.stats["spill_write_us"] += job.transfer_us \
+            + self.disk_seek_us + len(keys) * self.disk_write_us_per_page
+        self.stats["wb_peak_depth"] = max(self.stats["wb_peak_depth"],
+                                          len(self._pending_wb))
+
+    def ensure_resident(self, keys, now_us: Optional[float] = None
+                        ) -> float:
+        """Promote every spilled frame holding one of ``keys``; returns
+        the modeled stall µs (seek + per-page read, per frame) — the
+        engine charges it to its clock and to the admission latency."""
+        if now_us is not None:
+            self._now_us = max(self._now_us, float(now_us))
+        stall = 0.0
+        for key in keys:
+            f = self._spilled.get(tuple(key))
+            if f is not None:
+                stall += self._promote_frame(f)
+        return stall
+
+    def _promote_frame(self, f: int) -> float:
+        """SPILLED → HOST: whole-frame disk read back into the store."""
+        pages = self.spill_store.read_frame(
+            f, expect_domain=self.frames._frame_owner[f])
+        cost = self.disk_seek_us + len(pages) * self.disk_read_us_per_page
+        for key, (kp, vp) in pages:
+            self._spilled.pop(key, None)
+            self.store.put(key[0], key[1], key[2], kp, vp, kind="promote")
+        self.frames.promote(f)
+        self.spill_store.delete_frame(f)
+        self.stats["promoted_frames"] += 1
+        self.stats["promoted_pages"] += len(pages)
+        self.stats["promote_us"] += cost
+        self._now_us += cost
+        # The promote may itself overflow DRAM: spill someone colder
+        # (never the frame just promoted — it is the hottest by touch).
+        self._enforce_capacity(protect=frozenset((f,)))
+        return cost
+
+    def _hard_evict(self, protect: frozenset = frozenset()) -> None:
+        """The no-spill baseline: shed over-capacity *prefix* frames by
+        evicting their owners through the index (request frames hold
+        unreconstructible payloads and are never dropped)."""
+        while self.frames.resident_frames() > self.capacity_frames:
+            f = self.frames.spill_victim(exclude=protect,
+                                         owner_ok=self._is_prefix_domain)
+            if f is None:
+                break
+            evicted = 0
+            for owner in sorted({k[0] for k in self.frames.keys_of(f)}):
+                idx = self._index_for_owner(owner)
+                if idx is not None:
+                    evicted += idx.evict_owner_pages({owner})
+            if evicted == 0:
+                break               # nothing reachable through an index
+            self.stats["hard_evicted_pages"] += evicted
+
+    @staticmethod
+    def _is_prefix_domain(domain: Domain) -> bool:
+        return domain == PREFIX_DOMAIN or (
+            isinstance(domain, tuple) and bool(domain)
+            and domain[0] == PREFIX_DOMAIN)
+
+    def _index_for_owner(self, owner: int) -> Optional[PrefixIndex]:
+        """The index that minted a negative payload owner id (per-engine
+        indexes use the progression owner = -(i+1) - k·n, DESIGN.md §10)."""
+        if owner >= 0:
+            return None
+        if self.share_prefix:
+            return self.prefix
+        return self._engine_prefix[(-owner - 1) % self.n_engines]
+
+    # ------------------------------------------------------------ migrate
+
     def migrate_seq(self, seq: int, dst_engine: int) -> int:
         """Re-lease a request's host pages to another engine's domain —
-        the data half of work-stealing migration."""
-        return self.frames.migrate(self.store.seq_pages(seq), dst_engine)
+        the data half of work-stealing migration.  Spilled frames are
+        promoted first and queued write-backs cancelled: the on-disk
+        file records a single domain, and a migrating frame's domain is
+        about to change."""
+        keys = self.seq_pages(seq)
+        self.ensure_resident([k for k in keys if k in self._spilled])
+        for k in keys:
+            f = self.frames.frame_of(k)
+            if f is not None and f in self._pending_wb:
+                self._cancel_writeback(f)
+        return self.frames.migrate(keys, dst_engine)
 
     def check_invariants(self) -> None:
         self.frames.check_invariants()
-        # Every stored payload is placed, and in a frame of one domain.
+        # Every stored payload is placed, in a DRAM-resident frame.
         for key in self.store._pages:
-            assert self.frames.owner_of(key) is not None, \
-                f"host page {key} stored but not leased"
+            f = self.frames.frame_of(key)
+            assert f is not None, f"host page {key} stored but not leased"
+            assert self.frames.state_of(f) != FRAME_SPILLED, \
+                f"stored page {key} in spilled frame {f}"
+        # Placed keys partition across the two lower tiers by state.
+        for f, keys in self.frames._frame_keys.items():
+            spilled = self.frames.state_of(f) == FRAME_SPILLED
+            for k in keys:
+                if spilled:
+                    assert k in self._spilled and k not in self.store._pages
+                else:
+                    assert k in self.store._pages, \
+                        f"page {k} leased in DRAM frame {f} but not stored"
+        for key, f in self._spilled.items():
+            assert self.frames.state_of(f) == FRAME_SPILLED, (key, f)
+            assert self.spill_store.has_frame(f)
+        for f in self._pending_wb:
+            assert self.frames.state_of(f) == FRAME_PENDING_WB, f
+        if self.spill_enabled:
+            for f in self.spill_store.frame_ids():
+                assert self.frames.state_of(f) == FRAME_SPILLED, f
 
 
 # ---------------------------------------------------------------- cluster
@@ -337,7 +810,11 @@ def aggregate_engine_stats(stats: Sequence[EngineStats]) -> EngineStats:
     for st in stats:
         for f in dataclasses.fields(EngineStats):
             v = getattr(st, f.name)
-            if isinstance(v, (int, float)):
+            if isinstance(v, list):
+                # Per-admission samples (admit_lat_us): concatenate so
+                # cluster-wide percentiles see every engine's tail.
+                getattr(agg, f.name).extend(v)
+            elif isinstance(v, (int, float)):
                 setattr(agg, f.name, getattr(agg, f.name) + v)
         for tier, n in st.deadline_hits.items():
             agg.deadline_hits[tier] = agg.deadline_hits.get(tier, 0) + n
@@ -387,6 +864,16 @@ class ClusterStats:
                 f"{len(self.tier.frames)} frames (peak {fs['peak_frames']}) "
                 f"| moves {fs['whole_frame_moves']} whole-frame / "
                 f"{fs['page_moves']} page")
+            ts = self.tier.stats
+            if ts["spilled_frames"] or ts["promoted_frames"] \
+                    or ts["hard_evicted_pages"]:
+                lines.append(
+                    f"  spill: {ts['spilled_frames']} frames out "
+                    f"({ts['spilled_pages']} pages) / "
+                    f"{ts['promoted_frames']} promoted back "
+                    f"({ts['promote_us']:.0f}us stall) | cancels "
+                    f"{ts['spill_cancels']} | hard-evicted "
+                    f"{ts['hard_evicted_pages']} pages")
         return "\n".join(lines)
 
 
@@ -407,6 +894,12 @@ class ServingCluster:
                  prefix_cache: bool = True,
                  prefix_capacity_pages: int = 4096,
                  router_policy: str = "slack", migrate: bool = True,
+                 capacity_frames: Optional[int] = None,
+                 spill: bool = True, spill_dir: Optional[str] = None,
+                 wb_queue_frames: int = 4, wb_lanes: int = 1,
+                 disk_read_us_per_page: float = 25.0,
+                 disk_write_us_per_page: float = 25.0,
+                 disk_seek_us: float = 100.0,
                  **engine_kw) -> None:
         assert n_engines >= 1
         self.cfg = cfg
@@ -415,7 +908,13 @@ class ServingCluster:
         if share_host:
             self.tier = SharedHostTier(
                 geometry, n_engines=n_engines, share_prefix=share_prefix,
-                prefix_capacity_pages=prefix_capacity_pages)
+                prefix_capacity_pages=prefix_capacity_pages,
+                capacity_frames=capacity_frames, spill=spill,
+                spill_dir=spill_dir, wb_queue_frames=wb_queue_frames,
+                wb_lanes=wb_lanes,
+                disk_read_us_per_page=disk_read_us_per_page,
+                disk_write_us_per_page=disk_write_us_per_page,
+                disk_seek_us=disk_seek_us)
         self.engines: List[ServingEngine] = []
         params = None
         for i in range(n_engines):

@@ -72,8 +72,10 @@ class DMAJob:
 
     ``direction`` is the link direction the job occupies: ``"in"``
     (host→device: demand faults, prefetches) or ``"out"`` (device→host:
-    preemption eviction gathers, cold-prefix parking).  On a full-duplex
-    link the two directions have independent per-channel timelines.
+    preemption eviction gathers, cold-prefix parking, and the host
+    tier's whole-frame ``"spill"`` write-backs toward disk — DESIGN.md
+    §11).  On a full-duplex link the two directions have independent
+    per-channel timelines.
     """
 
     job_id: int
@@ -82,7 +84,7 @@ class DMAJob:
     start_us: float
     done_us: float
     payloads: List[Tuple[np.ndarray, np.ndarray]]
-    kind: str = "prefetch"          # "prefetch" | "demand" | "evict" | "park"
+    kind: str = "prefetch"   # "prefetch" | "demand" | "evict" | "park" | "spill"
     direction: str = "in"           # "in" (h→d) | "out" (d→h)
     channel: int = -1
     settled: bool = False           # hidden/exposed already accounted
@@ -138,7 +140,7 @@ class AsyncDMAEngine:
         self.in_flight: Dict[int, DMAJob] = {}
         self.stats = {
             "jobs": 0, "prefetch_jobs": 0, "demand_jobs": 0,
-            "evict_jobs": 0, "park_jobs": 0,
+            "evict_jobs": 0, "park_jobs": 0, "spill_jobs": 0,
             "pages": 0, "dma_count": 0, "bytes": 0,
             "transfer_us": 0.0,     # Σ per-job transfer_us (hidden+exposed)
             "hidden_us": 0.0,       # overlapped with compute

@@ -146,6 +146,16 @@ class EngineStats:
     # family cannot replay cached KV (MoE routing / MLA latents / ssm
     # state) — counted instead of silently caching unreplayable pages.
     prefix_park_skipped: int = 0
+    # Disk spill tier (DESIGN.md §11): parks refused by host-tier
+    # back-pressure (write-back buffer saturated), admissions that had
+    # to promote spilled frames, and the modeled disk-read stall µs.
+    prefix_park_refused: int = 0
+    promotions: int = 0
+    promote_stall_us: float = 0.0
+    # Per-admission modeled latency samples (µs): suffix/full prefill
+    # compute at prefill_us_per_token plus any promote stall — the
+    # distribution behind the spill bench's p99 claim.
+    admit_lat_us: List[float] = dataclasses.field(default_factory=list)
     # Cross-engine migration (DESIGN.md §10): preempted requests handed
     # off through the shared host tier, never re-prefilled.
     migrations_out: int = 0
@@ -188,6 +198,15 @@ class EngineStats:
     def admit_cold_mean_us(self) -> float:
         return self.admit_cold_us / max(self.admit_colds, 1)
 
+    def admit_p99_us(self, start: int = 0) -> float:
+        """p99 of the modeled per-admission latencies (µs), optionally
+        over the samples from index ``start`` on (benches slice off a
+        warm-up wave).  0.0 when no samples."""
+        samples = self.admit_lat_us[start:]
+        if not samples:
+            return 0.0
+        return float(np.percentile(np.asarray(samples), 99))
+
     def tok_per_s(self) -> float:
         # A zero-step engine (or mocked clock) must report 0, not explode.
         if self.wall_s <= 0.0:
@@ -216,6 +235,12 @@ class EngineStats:
                      f"hit/miss ({self.prefix_reused_tokens} tok reused)")
         if self.prefix_park_skipped:
             line += f" | parks skipped {self.prefix_park_skipped} (non-dense)"
+        if self.prefix_park_refused:
+            line += (f" | parks refused {self.prefix_park_refused} "
+                     f"(wb back-pressure)")
+        if self.promotions:
+            line += (f" | promotes {self.promotions} "
+                     f"({self.promote_stall_us:.0f}us stall)")
         if self.migrations_out or self.migrations_in:
             line += (f" | migrated {self.migrations_out} out / "
                      f"{self.migrations_in} in")
@@ -240,6 +265,7 @@ class ServingEngine:
                  fault_mode: str = "async", dma_channels: int = 2,
                  prefetch_depth: int = 2, victim_policy: str = "cost",
                  decode_window_us: Optional[float] = None,
+                 prefill_us_per_token: float = 50.0,
                  prefix_cache: bool = True,
                  prefix_capacity_pages: int = 4096,
                  duplex: bool = True,
@@ -268,6 +294,13 @@ class ServingEngine:
         # set an explicit window to model a real accelerator's step time
         # and exercise partial overlap deterministically.
         self.decode_window_us = decode_window_us
+        # Modeled prefill compute cost per prompt token (µs) — the basis
+        # of the per-admission latency samples (admit_lat_us): a cache
+        # hit pays only its suffix (+ any spill-promote stall), a cold
+        # admission the full prompt.  Deliberately on the same modeled
+        # timeline as decode_window_us, not wall time: CPU jit wall time
+        # would drown the µs-scale effects the benches measure.
+        self.prefill_us_per_token = prefill_us_per_token
         self.lm = LM(cfg)
         self.geo = geometry
         self.max_batch = max_batch
@@ -654,6 +687,18 @@ class ServingEngine:
         else:
             self._fault_in_async(seqs)
 
+    def _promote_missing(self, missing: Dict) -> None:
+        """Before popping payloads, promote any spilled frames the step's
+        misses live in (DESIGN.md §11) — the modeled disk-read stall is
+        exposed time, charged to the clock like a demand fault."""
+        keys = [(owner, s, vpn) for s, entries in missing.items()
+                for _ppn, owner, vpn in entries]
+        promote_us = self.host.ensure_resident(keys, now_us=self._clock_us)
+        if promote_us:
+            self._clock_us += promote_us
+            self.stats.promote_stall_us += promote_us
+            self.stats.promotions += 1
+
     def _scatter_pages(self, gidx: List[int],
                        payloads: List[Tuple[np.ndarray, np.ndarray]]
                        ) -> None:
@@ -676,6 +721,7 @@ class ServingEngine:
         missing = self.cache.missing_pages(seqs)
         if not missing:
             return
+        self._promote_missing(missing)
         pps = self.cache.pages_per_shard
         gidx: List[int] = []
         payloads: List[Tuple[np.ndarray, np.ndarray]] = []
@@ -705,6 +751,7 @@ class ServingEngine:
         missing = self.cache.missing_pages(seqs)
         if not missing:
             return
+        self._promote_missing(missing)
         pps = self.cache.pages_per_shard
         now = self._clock_us
         gidx: List[int] = []
@@ -893,19 +940,29 @@ class ServingEngine:
 
     def _prefill(self, req: Request):
         """Run prefill for an already-allocated request (see _admit_one):
-        suffix-only when a cached prefix matches, full otherwise."""
-        t0 = time.time()
+        suffix-only when a cached prefix matches, full otherwise.  Each
+        admission also records a *modeled* latency sample (admit_lat_us):
+        tokens actually prefilled × prefill_us_per_token, plus the disk
+        promote stall a cache hit paid to bring spilled prefix frames
+        back (DESIGN.md §11) — the wall-µs counters stay, but on CPU
+        they measure jit time, not the serving effect."""
+        t0 = time.perf_counter()
+        T = len(req.prompt)
         match = self._match_prefix(req)
         if match:
-            self._prefill_suffix(req, match)
+            promote_us = self._prefill_suffix(req, match)
             self.stats.admit_hits += 1
-            self.stats.admit_hit_us += (time.time() - t0) * 1e6
+            self.stats.admit_hit_us += (time.perf_counter() - t0) * 1e6
+            model_us = (T - len(match) * self.geo.page_tokens) \
+                * self.prefill_us_per_token + promote_us
         else:
             self._prefill_full(req)
             self.stats.admit_colds += 1
-            self.stats.admit_cold_us += (time.time() - t0) * 1e6
+            self.stats.admit_cold_us += (time.perf_counter() - t0) * 1e6
+            model_us = T * self.prefill_us_per_token
+        self.stats.admit_lat_us.append(model_us)
 
-    def _prefill_suffix(self, req: Request, pages) -> None:
+    def _prefill_suffix(self, req: Request, pages) -> float:
         """Cache-hit admission (DESIGN.md §8): restore the matched prefix
         pages through the host tier instead of recomputing them, and
         forward only the suffix (queries attend over the cached KV).
@@ -915,11 +972,25 @@ class ServingEngine:
         unpopped — (2) their freshly-allocated frames demoted to
         non-resident, and (3) prefetched through the DMA pipeline *now*,
         at admission, so the transfer overlaps whatever runs before the
-        first decode step touches them."""
+        first decode step touches them.
+
+        Promote-on-admission (DESIGN.md §11): matched pages whose frames
+        were spilled to disk are promoted back *before* the payload
+        reads, and the modeled disk stall — returned to the caller —
+        advances the engine clock and the admission latency sample.
+        Spill on/off changes only this timing, never the payload bytes,
+        so tokens stay byte-identical."""
         ptok = self.geo.page_tokens
         T = len(req.prompt)
         P = len(pages) * ptok
         self._run_compaction()
+        promote_us = self.host.ensure_resident(
+            [(pg.owner, pg.shard, pg.vpn) for pg in pages],
+            now_us=self._clock_us)
+        if promote_us:
+            self._clock_us += promote_us
+            self.stats.promote_stall_us += promote_us
+            self.stats.promotions += 1
         payloads = [self.prefix.payload(pg) for pg in pages]
         locs = [(pg.shard, pg.vpn) for pg in pages]
         for (s, vpn), (kp, vp) in zip(locs, payloads):
@@ -962,6 +1033,7 @@ class ServingEngine:
                     self._clock_us, kind="prefetch")
                 self._account_prefetch(job)
                 self.stats.prefix_fault_us += job.transfer_us
+        return promote_us
 
     def _park_prefix(self, req: Request) -> None:
         """Completion hook (DESIGN.md §8): park the finished request's
@@ -984,6 +1056,14 @@ class ServingEngine:
             return
         if not self.prefix_supported or self.pools is None:
             self.stats.prefix_park_skipped += 1
+            return
+        if not self.host.park_allowed():
+            # §11 back-pressure: the host tier's write-back buffer is
+            # saturated — parking more cold pages would queue unbounded
+            # dirty data in front of the disk.  Refuse (and count) the
+            # park; the prefix is simply not cached this time, which is
+            # always token-safe.
+            self.stats.prefix_park_refused += 1
             return
         hashes = self.prefix.chain_hashes(req.prompt)
         start = self.prefix.missing_from(hashes)
@@ -1118,7 +1198,12 @@ class ServingEngine:
         """One engine iteration as a two-stage pipeline: drain completed
         prefetches → admit → fault remaining misses (exposed) → decode
         while the next step's prefetch is in flight → retire."""
-        t0 = time.time()
+        t0 = time.perf_counter()
+        # Advance the host tier's write-back pipeline to the engine clock
+        # (DESIGN.md §11): frames whose spill completed during previous
+        # steps persist now, freeing write-back queue slots before this
+        # step's admissions and parks consult park_allowed().
+        self.host.pump(self._clock_us)
         if self.fault_mode == "async":
             # Stage 0: publish transfers that finished during the last
             # decode (double-buffer swap) so admission's resumes and this
@@ -1126,7 +1211,7 @@ class ServingEngine:
             self._drain_prefetches()
         self._admit()
         if not self.active:
-            self.stats.wall_s += time.time() - t0
+            self.stats.wall_s += time.perf_counter() - t0
             return False
         # Append this step's token slot, then pack tables.
         runnable = self._append_with_preemption()
@@ -1144,7 +1229,7 @@ class ServingEngine:
                     f"(pool too small or fragmentation unrecoverable)")
             # Stalled steps still did real work (admission attempts, forced
             # preemption gathers) — keep them in the tok/s denominator.
-            self.stats.wall_s += time.time() - t0
+            self.stats.wall_s += time.perf_counter() - t0
             return bool(self.active or self.queue or self.preempted)
         self._stalled_steps = 0
         seqs = [r.rid for r in runnable]
@@ -1164,7 +1249,7 @@ class ServingEngine:
         pos = jnp.asarray([self.cache.seq_tokens[r.rid] - 1
                            for r in runnable], jnp.int32)
         state = self._stack_states(seqs)
-        t_dec = time.time()
+        t_dec = time.perf_counter()
         logits, self.pools, state = self._decode_jit(
             self.params, toks, pos, self.pools, ctx, state)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
@@ -1172,7 +1257,11 @@ class ServingEngine:
         # modeled width if configured, else measured wall time.
         self._clock_us += (self.decode_window_us
                            if self.decode_window_us is not None
-                           else (time.time() - t_dec) * 1e6)
+                           else (time.perf_counter() - t_dec) * 1e6)
+        # The decode window may have carried queued write-backs past
+        # their disk-ready time: persist them before the completion
+        # parks below ask park_allowed().
+        self.host.pump(self._clock_us)
         self._unstack_states(seqs, state)
         done_now = []
         for i, r in enumerate(runnable):
@@ -1206,7 +1295,7 @@ class ServingEngine:
         self.stats.coalesced_sum += st.get("coalesced_fraction", 0.0)
         self.stats.occupancy_sum += st.get("occupancy", 0.0)
         self.stats.decode_steps += 1
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += time.perf_counter() - t0
         return True
 
     def _run_compaction(self):
@@ -1266,4 +1355,5 @@ class ServingEngine:
             # unaccounted while its µs sit in transfer_us).
             self._clock_us = max(self._clock_us, self.dma.busy_until())
             self._drain_prefetches()
+        self.host.pump(self._clock_us)
         return steps

@@ -24,6 +24,14 @@ Two kinds of tenant share the store:
   parked prefix, and ``drop_seq`` of a finished request (ids ≥ 0) can
   never evict them; only the index's own LRU eviction does.
 
+Below host DRAM sits a third, disk-backed tier (DESIGN.md §11):
+:class:`SpillStore` persists **whole frames** — one file per host frame,
+all pages of one protection domain, so the single-domain-per-frame
+invariant survives on disk verbatim.  The spill/promote orchestration
+(LRU victim choice, the write-back queue riding the outbound DMA lanes,
+promote-on-touch) lives in :class:`~repro.serving.cluster.SharedHostTier`;
+this module only owns the file format and the byte-exact round-trip.
+
 The device⇄host movement itself is the engine's job
 (:func:`repro.kernels.ops.page_gather` / ``page_scatter``); this class is
 pure host-side bookkeeping and therefore trivially testable.
@@ -33,7 +41,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+import os
+import shutil
+import tempfile
+from typing import Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,6 +65,7 @@ class HostPageStore:
             "swapped_out_pages": 0, "swapped_in_pages": 0,
             "swap_out_requests": 0, "swap_in_requests": 0,
             "peak_pages": 0, "cached_pages": 0, "reused_pages": 0,
+            "promoted_pages": 0,
         }
 
     # ------------------------------------------------------------- queries
@@ -86,12 +98,14 @@ class HostPageStore:
         ``kind="prefix"`` is a :class:`PrefixIndex` insertion;
         ``kind="reuse"`` a per-request copy of a cached prefix page
         registered at cache-hit admission (host-side memcpy, no bus
-        traffic — the transfer is accounted by the admission prefetch)."""
-        assert kind in ("swap", "prefix", "reuse"), kind
+        traffic — the transfer is accounted by the admission prefetch);
+        ``kind="promote"`` a page returning from the disk spill tier
+        (DESIGN.md §11 — the read is accounted by the promoting tier)."""
+        assert kind in ("swap", "prefix", "reuse", "promote"), kind
         self._pages[(seq, shard, vpn)] = (np.asarray(k_page),
                                           np.asarray(v_page))
         key = {"swap": "swapped_out_pages", "prefix": "cached_pages",
-               "reuse": "reused_pages"}[kind]
+               "reuse": "reused_pages", "promote": "promoted_pages"}[kind]
         self.stats[key] += 1
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        len(self._pages))
@@ -134,6 +148,156 @@ class HostPageStore:
         for k in keys:
             del self._pages[k]
         return len(keys)
+
+    # -------------------------------------------------------- tier hooks
+    # A standalone engine's private store has no disk tier underneath;
+    # these mirror the LeasedStoreView/SharedHostTier surface (DESIGN.md
+    # §11) so the engine never branches on which host it was given.
+
+    def park_allowed(self) -> bool:
+        """Back-pressure probe: an unbounded store always accepts parks."""
+        return True
+
+    def ensure_resident(self, keys: Iterable[Key],
+                        now_us: Optional[float] = None) -> float:
+        """Promote ``keys`` from the spill tier; returns the stall µs
+        (always 0 here — nothing is ever spilled from a private store)."""
+        return 0.0
+
+    def pump(self, now_us: float) -> None:
+        """Advance the tier's write-back pipeline to ``now_us`` (no-op)."""
+
+
+# ------------------------------------------------------------------- disk
+
+
+class SpillStore:
+    """Disk tier under the host store: whole-frame spill files (§11).
+
+    One ``.npz`` file per spilled host frame, holding every page payload
+    of that frame plus its keys and protection domain — so a frame comes
+    back from disk exactly as it left, and the single-domain-per-frame
+    invariant holds on disk *by construction* (a file cannot mix domains
+    because a frame cannot).  Round-trips are byte-exact; the modeled
+    disk latency/bandwidth lives in the orchestrating tier, not here.
+
+    ``root=None`` creates (lazily) and owns a temp directory, removed by
+    :meth:`close`; a caller-supplied ``root`` is reused and kept.
+    """
+
+    def __init__(self, root: Optional[str] = None) -> None:
+        self.root = root
+        self._owned = root is None
+        self._dir: Optional[str] = None
+        # frame id → (path, keys in file order, domain, per-page
+        # (k_dtype, k_shape, v_dtype, v_shape) — payloads are stored as
+        # raw bytes so non-native dtypes (bfloat16) round-trip exactly)
+        self._frames: Dict[int, Tuple[str, Tuple[Key, ...], Hashable,
+                                      Tuple[tuple, ...]]] = {}
+        self.stats = {
+            "frames_written": 0, "pages_written": 0, "bytes_written": 0,
+            "frames_read": 0, "pages_read": 0, "bytes_read": 0,
+            "frames_deleted": 0, "peak_frames": 0,
+        }
+
+    def _ensure_dir(self) -> str:
+        if self._dir is None:
+            if self.root is not None:
+                os.makedirs(self.root, exist_ok=True)
+                self._dir = self.root
+            else:
+                self._dir = tempfile.mkdtemp(prefix="mosaic-spill-")
+        return self._dir
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self._frames)
+
+    def has_frame(self, frame: int) -> bool:
+        return frame in self._frames
+
+    def frame_ids(self) -> List[int]:
+        return sorted(self._frames)
+
+    def frame_keys(self, frame: int) -> Tuple[Key, ...]:
+        return self._frames[frame][1]
+
+    @staticmethod
+    def _pack(arr: np.ndarray) -> Tuple[np.ndarray, np.dtype, tuple]:
+        """Flatten to raw uint8 — npz can't hold bfloat16 natively."""
+        a = np.ascontiguousarray(arr)
+        return a.view(np.uint8).reshape(-1), a.dtype, a.shape
+
+    # ------------------------------------------------------------- movement
+
+    def write_frame(self, frame: int, domain: Hashable,
+                    pages: Sequence[Tuple[Key, Tuple[np.ndarray,
+                                                     np.ndarray]]]) -> int:
+        """Persist one whole frame; returns the payload byte count."""
+        assert pages, "spilling an empty frame"
+        assert frame not in self._frames, f"frame {frame} already on disk"
+        path = os.path.join(self._ensure_dir(), f"frame_{frame:08d}.npz")
+        arrs: Dict[str, np.ndarray] = {
+            "keys": np.asarray([k for k, _ in pages], np.int64),
+            "domain": np.asarray(repr(domain)),
+        }
+        nbytes = 0
+        meta = []
+        for i, (_key, (kp, vp)) in enumerate(pages):
+            arrs[f"k{i}"], kdt, ksh = self._pack(kp)
+            arrs[f"v{i}"], vdt, vsh = self._pack(vp)
+            meta.append((kdt, ksh, vdt, vsh))
+            nbytes += kp.nbytes + vp.nbytes
+        arrs["dtypes"] = np.asarray([f"{m[0]}:{m[2]}" for m in meta])
+        np.savez(path, **arrs)
+        self._frames[frame] = (path, tuple(k for k, _ in pages), domain,
+                               tuple(meta))
+        self.stats["frames_written"] += 1
+        self.stats["pages_written"] += len(pages)
+        self.stats["bytes_written"] += nbytes
+        self.stats["peak_frames"] = max(self.stats["peak_frames"],
+                                        len(self._frames))
+        return nbytes
+
+    def read_frame(self, frame: int, expect_domain: Hashable = None
+                   ) -> List[Tuple[Key, Tuple[np.ndarray, np.ndarray]]]:
+        """Load a whole frame back (promote); file stays until deleted."""
+        path, keys, domain, meta = self._frames[frame]
+        if expect_domain is not None:
+            assert domain == expect_domain, \
+                f"frame {frame} spilled under {domain!r}, " \
+                f"promoted under {expect_domain!r}"
+        out: List[Tuple[Key, Tuple[np.ndarray, np.ndarray]]] = []
+        nbytes = 0
+        with np.load(path) as z:
+            stored = tuple(tuple(int(x) for x in row) for row in z["keys"])
+            assert stored == keys, f"frame {frame} file/index key mismatch"
+            for i, key in enumerate(stored):
+                kdt, ksh, vdt, vsh = meta[i]
+                kp = z[f"k{i}"].view(kdt).reshape(ksh)
+                vp = z[f"v{i}"].view(vdt).reshape(vsh)
+                nbytes += kp.nbytes + vp.nbytes
+                out.append((key, (kp, vp)))
+        self.stats["frames_read"] += 1
+        self.stats["pages_read"] += len(out)
+        self.stats["bytes_read"] += nbytes
+        return out
+
+    def delete_frame(self, frame: int) -> None:
+        path = self._frames.pop(frame)[0]
+        if os.path.exists(path):
+            os.remove(path)
+        self.stats["frames_deleted"] += 1
+
+    def close(self) -> None:
+        """Drop every file; removes the temp directory when owned."""
+        for f in list(self._frames):
+            self.delete_frame(f)
+        if self._owned and self._dir is not None \
+                and os.path.isdir(self._dir):
+            shutil.rmtree(self._dir, ignore_errors=True)
+        self._dir = None
 
 
 # ---------------------------------------------------------------- prefixes
@@ -307,6 +471,19 @@ class PrefixIndex:
         del self._pages[page.chain_hash]
         self.store.discard(page.owner, page.shard, page.vpn)
         self.stats["evicted_pages"] += 1
+
+    def evict_owner_pages(self, owners: Iterable[int]) -> int:
+        """Evict every cached page whose payload owner id is in ``owners``
+        (descendants included — prefix-closure survives).  The hard-capped
+        host tier (DESIGN.md §11, ``spill=False``) uses this to drop whole
+        prefix frames *through* the index, so index and store can never
+        disagree about what is cached.  Returns pages evicted."""
+        owners = set(owners)
+        before = self.stats["evicted_pages"]
+        for page in [p for p in self._pages.values() if p.owner in owners]:
+            if page.chain_hash in self._pages:      # not already cascaded
+                self._evict_page(page)
+        return self.stats["evicted_pages"] - before
 
     def drop_all(self) -> int:
         n = len(self._pages)

@@ -371,3 +371,143 @@ def test_mla_config_is_prefix_incompatible():
     # MLA caches latents, not K/V — no index is built, and a shared one
     # would be skip-counted (prefix_supported gates both paths).
     assert not eng.prefix_supported and eng.prefix is None
+
+
+# --------------------------------------------- §11 correctness satellites
+
+
+def test_frame_table_migrate_excludes_stale_keys():
+    """Regression: migrate() used to report len(keys) even when some
+    keys were never placed (or already released) — the router's
+    migrated_pages stat over-counted.  Only re-leased pages count."""
+    ft = HostFrameTable(frame_pages=2)
+    live = [(1, 0, 0), (1, 0, 1)]
+    for k in live:
+        ft.place(0, k)
+    stale = (1, 0, 99)                         # never placed
+    moved = ft.migrate(live + [stale], dst=1)
+    assert moved == 2
+    assert ft.owner_of(stale) is None
+    released = (1, 0, 1)
+    ft.release(released)
+    assert ft.migrate(live, dst=2) == 1        # released key now stale too
+    ft.check_invariants()
+
+
+def test_frame_table_migrate_partially_shared_frames_invariants():
+    """Every migrate shape at once — whole-frame flip, re-placement out
+    of a shared frame, stale keys, and a same-owner no-op — with the
+    lease invariants checked after."""
+    ft = HostFrameTable(frame_pages=2)
+    whole = [(1, 0, 0), (1, 0, 1)]             # exclusive, full frame
+    shared_mig = [(2, 0, 0)]                   # shares a frame with...
+    shared_stay = [(3, 0, 0)]                  # ...a non-migrating page
+    for k in whole + shared_mig + shared_stay:
+        ft.place(0, k)
+    already = [(4, 0, 0)]
+    ft.place(1, already[0])                    # already at dst: no-op
+    moved = ft.migrate(whole + shared_mig + already + [(9, 9, 9)], dst=1)
+    assert moved == 3                          # stale + same-dst excluded
+    assert ft.stats["whole_frame_moves"] == 1
+    assert ft.stats["page_moves"] == 1
+    assert {ft.owner_of(k) for k in whole + shared_mig + already} == {1}
+    assert ft.owner_of(shared_stay[0]) == 0
+    # The split frame holds one page per domain — in different frames.
+    assert ft._key_frame[shared_mig[0]] != ft._key_frame[shared_stay[0]]
+    ft.check_invariants()
+
+
+def test_view_drop_seq_releases_every_frame_slot():
+    """drop_seq must release each dropped page's frame slot: a frame
+    shared by two sequences survives (slots partially freed), and fully
+    freed frames recycle for another domain."""
+    tier = SharedHostTier(GEO, n_engines=2)
+    v = tier.view(0)
+    for i in range(5):                         # 5 pages → 2 frames of 4
+        v.put(1, 0, i, *_payload(float(i)))
+    v.put(2, 0, 0, *_payload(9.0))             # co-tenant in frame 2
+    shared_frame = tier.frames._key_frame[(2, 0, 0)]
+    assert shared_frame == tier.frames._key_frame[(1, 0, 4)]
+    assert v.drop_seq(1) == 5
+    tier.check_invariants()
+    # The exclusive frame recycled; the shared one kept only seq 2.
+    assert len(tier.frames) == 1
+    assert tier.frames.keys_of(shared_frame) == {(2, 0, 0)}
+    assert tier.frames.stats["frames_recycled"] == 1
+    # Freed slots are reusable by a different domain immediately.
+    v1 = tier.view(1)
+    for i in range(4):
+        v1.put(3, 0, i, *_payload(float(i)))
+    assert len(tier.frames) == 2               # reuses the recycled frame
+    tier.check_invariants()
+    assert v.drop_seq(2) == 1 and v1.drop_seq(3) == 4
+    assert len(tier.frames) == 0
+
+
+def _prefix_index_invariants(idx, store):
+    # (a) Prefix-closure: every cached page's parent chain is cached.
+    for p in idx._pages.values():
+        if p.parent is not None:
+            assert p.parent in idx._pages, "orphaned prefix page"
+            assert idx._pages[p.parent].page_index == p.page_index - 1
+    # (b/c) Index ↔ store payload consistency, both directions.
+    index_keys = {(p.owner, p.shard, p.vpn) for p in idx._pages.values()}
+    store_keys = set(store._pages)
+    assert index_keys == store_keys, "index and store disagree"
+
+
+def test_prefix_index_prefix_closed_randomized():
+    """Property test (seeded): random park/match/evict interleavings
+    keep the index prefix-closed and index↔store consistent."""
+    rng = np.random.default_rng(42)
+    store = HostPageStore()
+    idx = PrefixIndex(store, PTOK, capacity_pages=6)
+    streams = [rng.integers(0, 997, 4 * PTOK).astype(np.int32)
+               for _ in range(5)]
+    vpn = 0
+    for _ in range(300):
+        op = rng.integers(0, 3)
+        toks = streams[rng.integers(0, len(streams))]
+        n_pages = int(rng.integers(1, 5))
+        toks = toks[:n_pages * PTOK]
+        if op == 0:                            # park the missing suffix
+            hashes = idx.chain_hashes(toks)
+            start = idx.missing_from(hashes)
+            for i in range(start, len(hashes)):
+                parent = hashes[i - 1] if i > 0 else None
+                idx.park(hashes[i], parent, i, 0, vpn,
+                         *_payload(float(vpn % 50)))
+                vpn += 1
+        elif op == 1:                          # match touches LRU ticks
+            n, pages = idx.match(toks)
+            assert n <= n_pages
+            for pg in pages:                   # every hit is readable
+                idx.payload(pg)
+        else:                                  # external owner eviction
+            if idx._pages:
+                victims = rng.choice(
+                    [p.owner for p in idx._pages.values()],
+                    size=min(2, len(idx._pages)), replace=False)
+                idx.evict_owner_pages(int(o) for o in victims)
+        assert len(idx) <= idx.capacity_pages
+        _prefix_index_invariants(idx, store)
+    assert idx.stats["parked_pages"] > 0 and idx.stats["evicted_pages"] > 0
+    assert idx.stats["hit_pages"] > 0
+
+
+def test_engine_wall_clock_survives_wall_time_jumps(monkeypatch):
+    """Regression: engine timing used time.time(), so an NTP step (or a
+    frozen clock, as here) corrupted wall_s/tok_per_s.  perf_counter is
+    monotonic — a constant time.time() must not zero the throughput."""
+    import time as time_mod
+    monkeypatch.setattr(time_mod, "time", lambda: 1234.5)
+    cfg = get_smoke_config("qwen2.5-3b")
+    eng = ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                        manager_kind="mosaic", seed=0, prefix_cache=False)
+    r = Request(rid=0, tenant=0, prompt=np.arange(16, dtype=np.int32),
+                max_new=2)
+    eng.submit(r)
+    eng.run_until_drained(max_steps=100)
+    assert r.done
+    assert eng.stats.wall_s > 0.0
+    assert eng.stats.tok_per_s() > 0.0

@@ -1,0 +1,307 @@
+"""Disk spill tier tests (DESIGN.md §11).
+
+Covers the SpillStore's byte-exact whole-frame files, the host tier's
+capacity-bound spill/promote state machine (LRU victim choice,
+promote-on-touch, write-back cancellation), the bounded write-back
+buffer's refuse-park back-pressure, the hard-capped (no-spill) baseline
+that evicts prefix frames *through* the index, migration over spilled
+sequences, the modeled promote stall, and end-to-end token identity of
+a capped cluster vs an unbounded one.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.serving.cluster import (FRAME_HOST, FRAME_PENDING_WB,
+                                   FRAME_SPILLED, ServingCluster,
+                                   SharedHostTier)
+from repro.serving.engine import Request
+from repro.serving.host_tier import SpillStore
+
+GEO = PoolGeometry(page_tokens=8, frame_pages=2, compact_threshold=0.4)
+
+
+def _payload(tag: float):
+    return (np.full((2, 3), tag, np.float32),
+            np.full((2, 3), -tag, np.float32))
+
+
+def _tier(**kw):
+    kw.setdefault("capacity_frames", 2)
+    return SharedHostTier(GEO, n_engines=1, **kw)
+
+
+def _fill(view, seq, n, tag0=0.0):
+    for i in range(n):
+        view.put(seq, 0, i, *_payload(tag0 + i))
+
+
+# ------------------------------------------------------------ SpillStore
+
+
+def test_spillstore_roundtrip_byte_exact():
+    store = SpillStore()
+    kp = np.arange(12, dtype=np.float32).reshape(3, 4)
+    vp = -kp
+    pages = [((5, 0, 0), (kp, vp)), ((5, 0, 1), (kp + 1, vp - 1))]
+    nbytes = store.write_frame(7, "dom", pages)
+    assert nbytes == sum(k.nbytes + v.nbytes for _, (k, v) in pages)
+    assert store.has_frame(7) and len(store) == 1
+    assert store.frame_keys(7) == ((5, 0, 0), (5, 0, 1))
+    back = store.read_frame(7, expect_domain="dom")
+    for (k0, (a0, b0)), (k1, (a1, b1)) in zip(pages, back):
+        assert k0 == k1
+        assert a0.tobytes() == a1.tobytes() and a0.dtype == a1.dtype
+        assert b0.tobytes() == b1.tobytes() and b0.shape == b1.shape
+    with pytest.raises(AssertionError):
+        store.read_frame(7, expect_domain="other")
+    store.delete_frame(7)
+    assert not store.has_frame(7) and store.stats["frames_deleted"] == 1
+    store.close()
+
+
+def test_spillstore_roundtrip_bfloat16():
+    # KV payloads are bfloat16 in the real engine; npz has no native
+    # bfloat16, so the store must round-trip raw bytes + dtype exactly.
+    import ml_dtypes
+    store = SpillStore()
+    kp = np.arange(8).reshape(2, 4).astype(ml_dtypes.bfloat16)
+    vp = (kp * 2).astype(ml_dtypes.bfloat16)
+    store.write_frame(0, None, [((1, 0, 0), (kp, vp))])
+    (_, (k2, v2)), = store.read_frame(0)
+    assert k2.dtype == kp.dtype and k2.tobytes() == kp.tobytes()
+    assert v2.dtype == vp.dtype and v2.tobytes() == vp.tobytes()
+    store.close()
+
+
+# --------------------------------------------------- spill state machine
+
+
+def test_tier_spills_lru_frames_over_capacity_and_promotes():
+    tier = _tier()
+    v = tier.view(9)
+    _fill(v, 9, 8)                  # 4 frames, capacity 2 → 2 must go
+    assert len(tier._pending_wb) == 2
+    tier.check_invariants()
+    tier.flush()
+    tier.check_invariants()
+    assert len(tier._pending_wb) == 0
+    assert tier.stats["spilled_frames"] == 2
+    states = [tier.frames.state_of(f)
+              for f in sorted(tier.frames._frame_owner)]
+    # LRU: the two oldest frames went; the two youngest stayed.
+    assert states == [FRAME_SPILLED, FRAME_SPILLED,
+                      FRAME_HOST, FRAME_HOST]
+    assert tier.frames.resident_frames() == 2
+    # Promote-on-touch: reading a spilled page brings its whole frame
+    # back byte-exact (and may re-spill another to hold capacity).
+    key = next(iter(tier._spilled))
+    kp, _vp = v.peek(*key)
+    assert np.array_equal(kp, _payload(float(key[2]))[0])
+    assert tier.stats["promoted_frames"] == 1
+    assert tier.frames.state_of(tier.frames.frame_of(key)) == FRAME_HOST
+    tier.check_invariants()
+    # Every page is still reachable through the view, spilled or not.
+    assert sorted(v.seq_pages(9)) == [(9, 0, i) for i in range(8)]
+    for i in range(8):
+        assert np.array_equal(v.peek(9, 0, i)[0], _payload(float(i))[0])
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_spill_rides_outbound_dma_as_one_job_per_frame():
+    tier = _tier()
+    _fill(tier.view(9), 9, 8)
+    tier.flush()
+    d = tier.wb_dma.stats
+    # Whole frame = contiguous pages = exactly one outbound descriptor.
+    assert d["spill_jobs"] == tier.spill_store.stats["frames_written"]
+    assert d["spill_jobs"] >= 2
+    assert tier.stats["spill_write_us"] > 0.0
+    tier.spill_store.close()
+
+
+def test_touch_before_persist_cancels_writeback():
+    tier = _tier(disk_write_us_per_page=1e6)    # never ready on its own
+    v = tier.view(9)
+    _fill(v, 9, 5)                  # 3 frames (last holds 1 page)
+    assert len(tier._pending_wb) == 1
+    pending_frame = next(iter(tier._pending_wb))
+    # Pop the *only* key that would leave the pending frame empty after
+    # removal ⇒ the write-back is cancelled, never persisted.
+    keys = sorted(tier.frames.keys_of(pending_frame))
+    for k in keys[:-1]:
+        v.pop(*k)
+    assert tier.frames.state_of(pending_frame) == FRAME_PENDING_WB
+    v.pop(*keys[-1])
+    assert tier.frames.stats["spill_cancels"] == 1
+    assert len(tier._pending_wb) == 0
+    assert tier.stats["spilled_frames"] == 0
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_pop_of_spilled_page_promotes_first():
+    tier = _tier()
+    v = tier.view(9)
+    _fill(v, 9, 8)
+    tier.flush()
+    key = next(iter(tier._spilled))
+    kp, vp = v.pop(*key)
+    assert np.array_equal(kp, _payload(float(key[2]))[0])
+    assert not v.has(*key)
+    assert key not in tier._spilled
+    assert tier.stats["promoted_frames"] >= 1
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_ensure_resident_charges_seek_plus_per_page_read():
+    tier = _tier(disk_seek_us=100.0, disk_read_us_per_page=25.0)
+    v = tier.view(9)
+    _fill(v, 9, 8)
+    tier.flush()
+    frame = sorted(f for f, s in tier.frames._state.items()
+                   if s == FRAME_SPILLED)[0]
+    keys = sorted(tier.spill_store.frame_keys(frame))
+    stall = v.ensure_resident(keys, now_us=0.0)
+    assert stall == pytest.approx(100.0 + 25.0 * len(keys))
+    assert v.ensure_resident(keys) == 0.0       # already resident
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_drop_seq_over_spilled_frames_releases_every_slot():
+    tier = _tier()
+    v = tier.view(9)
+    _fill(v, 9, 8)
+    tier.flush()
+    assert len(tier._spilled) > 0
+    assert v.drop_seq(9) == 8
+    assert len(tier.frames) == 0
+    assert len(tier._spilled) == 0 and len(tier.spill_store) == 0
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_migrate_seq_promotes_and_cancels_before_release():
+    tier = _tier(wb_queue_frames=4, disk_write_us_per_page=1e6)
+    v = tier.view(9)
+    _fill(v, 9, 4)                  # 2 frames at capacity
+    for i in range(4, 6):           # push over → 1 pending write-back
+        v.put(9, 0, i, *_payload(float(i)))
+    assert len(tier._pending_wb) == 1
+    moved = tier.migrate_seq(9, 3)
+    assert moved == 6               # every page of seq 9 re-leased
+    assert all(tier.frames.owner_of((9, 0, i)) == 3 for i in range(6))
+    # Nothing of seq 9 is left pending or on disk mid-migration.
+    for f in tier._pending_wb:
+        assert all(k[0] != 9 for k in tier.frames.keys_of(f))
+    assert all(k[0] != 9 for k in tier._spilled)
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+# ------------------------------------------------------- back-pressure
+
+
+def test_park_allowed_goes_false_when_wb_queue_full():
+    tier = _tier(wb_queue_frames=1, disk_write_us_per_page=1e6)
+    v = tier.view(9)
+    assert tier.park_allowed()
+    _fill(v, 9, 8)                  # over capacity; queue bound = 1
+    assert len(tier._pending_wb) == 1
+    assert tier.stats["wb_peak_depth"] == 1
+    assert not tier.park_allowed()
+    assert not v.park_allowed()     # the view engines hold agrees
+    # Resident count stays over capacity rather than queueing more.
+    assert tier.frames.resident_frames() > tier.capacity_frames
+    tier.flush()                    # disk catches up → pressure clears
+    assert tier.park_allowed()
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+# ------------------------------------------------------ hard-cap baseline
+
+
+def test_hard_cap_evicts_prefix_frames_through_index():
+    tier = _tier(capacity_frames=2, spill=False)
+    assert tier.spill_store is None
+    idx = tier.prefix
+    rng = np.random.default_rng(0)
+    vpn = 0
+    for _chain in range(4):             # 4 × 2-page chains > cap 2 frames
+        toks = rng.integers(0, 1000, 2 * GEO.page_tokens)
+        parent = None
+        for i, h in enumerate(idx.chain_hashes(toks)):
+            idx.park(h, parent, i, 0, vpn, *_payload(float(vpn)))
+            parent = h
+            vpn += 1
+    assert tier.stats["hard_evicted_pages"] > 0
+    assert tier.frames.resident_frames() <= tier.capacity_frames
+    # Index ↔ store never disagree: every cached page has its payload,
+    # and evicted payloads are gone from the store too.
+    for page in idx._pages.values():
+        assert tier.store.has(page.owner, page.shard, page.vpn)
+    live = {(p.owner, p.shard, p.vpn) for p in idx._pages.values()}
+    for key in tier.store._pages:
+        if key[0] < 0:
+            assert key in live
+    tier.check_invariants()
+
+
+def test_hard_cap_never_drops_request_frames():
+    tier = _tier(capacity_frames=1, spill=False)
+    v = tier.view(9)
+    _fill(v, 9, 6)                  # request pages: not reconstructible
+    # Over capacity with nothing evictable: the cap goes soft instead
+    # of dropping data.
+    assert tier.frames.resident_frames() == 3
+    assert tier.stats["hard_evicted_pages"] == 0
+    assert sorted(v.seq_pages(9)) == [(9, 0, i) for i in range(6)]
+    tier.check_invariants()
+
+
+# ------------------------------------------------------------ end-to-end
+
+
+def _run_capped_cluster(capacity_frames, spill):
+    cfg = get_smoke_config("qwen2.5-3b")
+    geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
+    cluster = ServingCluster(cfg, geometry=geo, n_engines=2, max_batch=4,
+                             max_seq=128, seed=0, decode_window_us=1000.0,
+                             capacity_frames=capacity_frames, spill=spill)
+    rng = np.random.default_rng(1)
+    shared = [rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+              for _ in range(3)]
+    reqs = [Request(rid=i, tenant=i % 3,
+                    prompt=np.concatenate(
+                        [shared[i % 3],
+                         rng.integers(0, cfg.vocab_size, 8)
+                         .astype(np.int32)]),
+                    max_new=4)
+            for i in range(6)]
+    for r in reqs[:3]:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=1000)
+    for r in reqs[3:]:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=2000)
+    assert all(r.done for r in reqs)
+    cluster.check_invariants()
+    return cluster, {r.rid: tuple(r.out) for r in reqs}
+
+
+def test_cluster_tokens_identical_capped_spill_vs_unbounded():
+    _, out_unbounded = _run_capped_cluster(None, True)
+    spilled, out_spill = _run_capped_cluster(3, True)
+    _, out_hard = _run_capped_cluster(3, False)
+    assert out_spill == out_unbounded == out_hard
+    # The capped run really exercised the disk tier.
+    assert spilled.tier.stats["spilled_frames"] > 0
+    assert spilled.tier.stats["promoted_frames"] > 0
+    t = spilled.stats().totals
+    assert t.promotions > 0 and t.promote_stall_us > 0.0
