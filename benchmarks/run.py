@@ -16,6 +16,7 @@ Suites:
   prefix-reuse  content-hash prefix cache + full-duplex DMA (§8)
   cluster  shared host tier + deadline router + migration (§10)
   spill    disk spill tier + write-back back-pressure     (§11)
+  faults   crash recovery + spill integrity + degrade     (§12)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -149,6 +150,9 @@ def main(argv=None):
             serving_bench.spill_compare(n_engines=args.engines)
             + serving_bench.spill_backpressure_compare()
             + serving_bench.spill_sim_compare(n_access=n // 2)),
+        "faults": lambda: (
+            serving_bench.faults_crash_compare()
+            + serving_bench.faults_spill_compare()),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

@@ -86,6 +86,21 @@ Spill tier (DESIGN.md §11):
   writebacks stream host→disk after their link transfer; the disk is an
   order of magnitude slower than the link, so one lane queues evictions
   (``disk_contention_cycles``) and a second lane relieves them.
+
+Fault tolerance (DESIGN.md §12):
+
+* ``faults_crash_compare`` — a seeded engine crash mid-decode vs the
+  same crash with no failover, vs fault-free: the router re-homes the
+  victim's preempted bundle to a survivor (zero re-prefill) and
+  re-dispatches its in-flight/queued requests from the prompt;
+  recovered tokens are byte-identical to the fault-free run and the
+  deadline-met fraction is strictly above the no-failover baseline.
+* ``faults_spill_compare`` — the spill workload under injected disk
+  faults: bit-flipped spill frames are caught 100 % by the per-frame
+  checksum (quarantine + re-derive, never decoded from); unbounded
+  write errors trigger bounded retries with backoff then a graceful
+  degrade to the hard-cap path with zero dropped requests; injected
+  DMA stalls shift timing only, reproducibly under the same seed.
 """
 
 from __future__ import annotations
@@ -845,7 +860,7 @@ def _grouped_prefix_reqs(cfg, *, n_groups=4, per_group=3, shared_tokens=40,
 
 def run_spill_cluster(spill: bool, *, capacity_frames: int = 3,
                       n_engines: int = 2, n_groups: int = 4,
-                      per_group: int = 3):
+                      per_group: int = 3, injector=None):
     """Two-wave grouped-prefix workload under a hard host-frame cap.
 
     Wave 1 (one request per group) parks every group's prefix; with
@@ -862,7 +877,8 @@ def run_spill_cluster(spill: bool, *, capacity_frames: int = 3,
     cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
                              max_batch=4, max_seq=128, seed=0,
                              capacity_frames=capacity_frames, spill=spill,
-                             decode_window_us=1000.0)
+                             decode_window_us=1000.0,
+                             fault_injector=injector)
     groups = _grouped_prefix_reqs(cfg, n_groups=n_groups,
                                   per_group=per_group)
     wave1 = [g[0] for g in groups]
@@ -1019,4 +1035,224 @@ def spill_sim_compare(n_access: int = 2000,
     rows.append({"bench": "spill-sim", "disk_lanes": "CLAIM",
                  "claim_spill_disk_lanes_relieve_writeback":
                      bool(res[1] > 0 and res[2] < res[1])})
+    return rows
+
+
+# -------------------------------------------------------- fault tolerance
+
+
+def _kill_unrecovered(cluster, idx: int) -> None:
+    """Model an engine crash with NO failover (the baseline the recovery
+    claim is measured against): the engine dies and takes its queued and
+    in-flight work with it — those requests never complete.  The dead
+    domain's host frames are still reclaimed so tier invariants hold."""
+    victim = cluster.engines[idx]
+    victim.alive = False
+    victim.active.clear()
+    victim.queue.clear()
+    victim.preempted.clear()
+    victim._held.clear()
+    victim.states.clear()
+    victim._saved_tokens.clear()
+    if cluster.tier is not None:
+        cluster.tier.reclaim_domain(victim.engine_id)
+
+
+def run_crash_cluster(mode: str):
+    """Deadline workload with replica 0 carrying most of the work.
+
+    Replica 0 decodes two long requests, a premium request preempts one
+    of them (leaving a host-side bundle), and a small burst lands on the
+    idle replica 1.  ``mode``:
+
+    * ``"fault-free"``  — no failure; reference tokens and SLO.
+    * ``"recovery"``    — the injector kills engine 0 at router step 6
+      (mid-decode, bundle parked): the router re-homes the preempted
+      bundle to replica 1 with zero re-prefill and re-dispatches the
+      in-flight/queued victims from the prompt.
+    * ``"no-recovery"`` — the same crash point with failover disabled:
+      the victim's requests die with the engine.
+    """
+    from repro.serving.cluster import ServingCluster
+    from repro.serving.faults import FaultInjector, FaultPlan
+
+    crash_step = 6
+    inj = FaultInjector(FaultPlan(engine_crashes=((crash_step, 0),))) \
+        if mode == "recovery" else None
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=2, max_batch=2,
+                             max_seq=128, seed=0, prefix_cache=False,
+                             migrate=False, decode_window_us=1000.0,
+                             fault_injector=inj)
+    rng = np.random.default_rng(5)
+    long_reqs = [Request(rid=i, tenant=0, priority=0,
+                         prompt=rng.integers(0, cfg.vocab_size, 32)
+                         .astype(np.int32), max_new=20,
+                         deadline_us=120_000.0)
+                 for i in range(2)]
+    for r in long_reqs:
+        cluster.submit(r, engine=0)
+    for _ in range(2):
+        cluster.step()
+    premium = Request(rid=2, tenant=1, priority=2,
+                      prompt=rng.integers(0, cfg.vocab_size, 24)
+                      .astype(np.int32), max_new=6, deadline_us=40_000.0)
+    cluster.submit(premium, engine=0)
+    for _ in range(2):
+        cluster.step()
+    burst = [Request(rid=3 + i, tenant=2, priority=0,
+                     prompt=rng.integers(0, cfg.vocab_size, 24)
+                     .astype(np.int32), max_new=6, deadline_us=60_000.0)
+             for i in range(2)]
+    for r in burst:
+        cluster.submit(r)
+    reqs = long_reqs + [premium] + burst
+    if mode == "no-recovery":
+        for _ in range(2):          # reach the same crash point
+            cluster.step()
+        _kill_unrecovered(cluster, 0)
+    cluster.run_until_drained(max_steps=1500)
+    if mode != "no-recovery":
+        assert all(r.done for r in reqs), f"{mode}: workload not drained"
+    cluster.check_invariants()
+    return cluster, reqs
+
+
+def faults_crash_compare() -> List[Dict]:
+    """Engine-crash recovery vs a no-failover baseline (DESIGN.md §12).
+
+    Claims: (a) after the crash the recovered run's tokens are
+    byte-identical to the fault-free run's for *every* request — the
+    preempted bundle resumes on the survivor with zero re-prefill, the
+    in-flight/queued victims replay deterministically from the prompt;
+    (b) recovery's deadline-met fraction (over all submitted
+    deadline-carrying requests; never-completed counts as a miss) is
+    strictly above the no-failover baseline's.
+    """
+    rows = []
+    outs, met, clusters = {}, {}, {}
+    for mode in ("fault-free", "recovery", "no-recovery"):
+        cluster, reqs = run_crash_cluster(mode)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs if r.done}
+        clusters[mode] = cluster
+        t = cluster.stats().totals
+        rs = cluster.router.stats
+        n_dl = sum(1 for q in reqs if q.deadline_us is not None)
+        met[mode] = sum(t.deadline_hits.values()) / max(n_dl, 1)
+        rows.append({
+            "bench": "faults-crash", "mode": mode,
+            "engines": len(cluster.engines),
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "completed": sum(1 for q in reqs if q.done),
+            "requests": len(reqs),
+            "deadline_met_frac": round(met[mode], 3),
+            "crashes": rs.crashes,
+            "recovered_bundles": rs.recovered_bundles,
+            "recovered_requeued": rs.recovered_requeued,
+            "reclaimed_frames": cluster.tier.stats["reclaimed_frames"],
+        })
+    rec = clusters["recovery"].router.stats
+    # The scenario must actually bite: one crash, at least one zero-
+    # re-prefill bundle re-homed, at least one victim re-dispatched.
+    crash_bit = (rec.crashes == 1 and rec.recovered_bundles >= 1
+                 and rec.recovered_requeued >= 1)
+    identical = outs["recovery"] == outs["fault-free"]
+    rows.append({"bench": "faults-crash", "mode": "CLAIM",
+                 "claim_faults_crash_tokens_identical":
+                     bool(crash_bit and identical),
+                 "claim_faults_recovery_higher_slo":
+                     bool(crash_bit
+                          and met["recovery"] > met["no-recovery"])})
+    assert identical, "crash recovery changed model outputs!"
+    return rows
+
+
+def faults_spill_compare() -> List[Dict]:
+    """Spill-store integrity under injected disk faults (DESIGN.md §12).
+
+    The ``spill_compare`` workload (grouped prefixes overflowing the
+    frame cap, spill on) re-run under four fault plans against a clean
+    reference:
+
+    * ``corrupt``   — every spilled frame gets a seeded bit flip on
+      disk.  Claims: the blake2b checksum catches **100 %** of corrupt
+      reads (no corrupted frame is ever decoded from: zero successful
+      reads), every caught frame is quarantined, and tokens still match
+      the clean run — quarantined prefixes are re-derived by a full
+      prefill, never served from bad bytes.
+    * ``degrade``   — every disk write fails (transient, unbounded).
+      Bounded retries with exponential backoff are charged to the
+      modeled clock; once the error rate crosses the threshold the tier
+      degrades to the hard-cap (spill-off) path.  Claims: the tier
+      degraded, retries/backoff were exercised, and **zero requests
+      dropped** — tokens identical to the clean run.
+    * ``dma-stall`` (x2, same seed) — every 3rd DMA job stalls 500 µs.
+      Claims: stalls fired, tokens are unchanged (timing-only fault),
+      and two identically-seeded runs produce identical injector stats
+      (the fault schedule is reproducible).
+    """
+    from repro.serving.faults import FaultInjector, FaultPlan
+
+    plans = {
+        "clean": None,
+        "corrupt": FaultPlan(corrupt_write_rate=1.0),
+        "degrade": FaultPlan(disk_write_error_rate=1.0,
+                             max_transient_failures=10 ** 6),
+        "dma-stall": FaultPlan(dma_stall_every=3, dma_stall_us=500.0),
+        "dma-stall-b": FaultPlan(dma_stall_every=3, dma_stall_us=500.0),
+    }
+    rows, outs, clusters, injs = [], {}, {}, {}
+    for mode, plan in plans.items():
+        inj = FaultInjector(plan) if plan is not None else None
+        cluster, reqs, _ = run_spill_cluster(True, injector=inj)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        clusters[mode], injs[mode] = cluster, inj
+        tier = cluster.tier
+        ss = tier.spill_store.stats if tier.spill_store is not None else {}
+        rows.append({
+            "bench": "faults-spill", "mode": mode,
+            "spilled_frames": tier.stats["spilled_frames"],
+            "promoted_frames": tier.stats["promoted_frames"],
+            "frames_quarantined": tier.stats["frames_quarantined"],
+            "checksum_failures": ss.get("checksum_failures", 0),
+            "frames_read_ok": ss.get("frames_read", 0),
+            "disk_errors": tier.stats["disk_errors"],
+            "disk_retries": tier.stats["disk_retries"],
+            "retry_backoff_us": round(tier.stats["retry_backoff_us"], 1),
+            "degraded": tier.stats["degraded"],
+            "lost_restarts": cluster.stats().totals.lost_restarts,
+            "dma_stalls": inj.stats["dma_stalls"] if inj else 0,
+            "injected_stall_us":
+                round(inj.stats["dma_stall_us"], 1) if inj else 0.0,
+        })
+    # Clean reference must exercise the disk at all for the injected
+    # plans to mean anything.
+    clean_bit = (clusters["clean"].tier.stats["spilled_frames"] > 0
+                 and clusters["clean"].tier.stats["promoted_frames"] > 0)
+    ssc = clusters["corrupt"].tier.spill_store.stats
+    tc = clusters["corrupt"].tier.stats
+    detected = (clean_bit and ssc["checksum_failures"] >= 1
+                and ssc["frames_read"] == 0          # 100%: none decoded
+                and tc["frames_quarantined"] >= 1
+                and injs["corrupt"].stats["corrupted_frames"] >= 1)
+    corrupt_identical = outs["corrupt"] == outs["clean"]
+    td = clusters["degrade"].tier
+    degrade_ok = (clean_bit and bool(td.degraded)
+                  and td.stats["disk_retries"] >= 1
+                  and td.stats["retry_backoff_us"] > 0.0
+                  and outs["degrade"] == outs["clean"])
+    ia, ib = injs["dma-stall"], injs["dma-stall-b"]
+    dma_ok = (ia.stats["dma_stalls"] >= 1
+              and outs["dma-stall"] == outs["clean"]
+              and outs["dma-stall"] == outs["dma-stall-b"]
+              and ia.stats == ib.stats)
+    rows.append({"bench": "faults-spill", "mode": "CLAIM",
+                 "claim_faults_corruption_detected": bool(detected),
+                 "claim_faults_corruption_tokens_identical":
+                     bool(clean_bit and corrupt_identical),
+                 "claim_faults_degrade_zero_drops": bool(degrade_ok),
+                 "claim_faults_dma_stall_timing_only": bool(dma_ok)})
+    assert corrupt_identical, "spill corruption leaked into outputs!"
+    assert outs["degrade"] == outs["clean"], \
+        "degraded tier changed model outputs!"
     return rows

@@ -52,6 +52,8 @@ from repro.configs.base import ModelConfig, PoolGeometry
 from repro.core.demand_paging import LinkModel
 from repro.serving.dma import AsyncDMAEngine
 from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.faults import (FaultInjector, SpillCorruptionError,
+                                  SpillIOError)
 from repro.serving.host_tier import HostPageStore, PrefixIndex, SpillStore
 from repro.serving.router import RequestRouter, RouterStats
 
@@ -437,6 +439,9 @@ class LeasedStoreView:
             return 0.0
         return self.tier.ensure_resident(keys, now_us)
 
+    def take_lost(self, seq: int) -> bool:
+        return False if self.tier is None else self.tier.take_lost(seq)
+
     def pump(self, now_us: float) -> None:
         if self.tier is not None:
             self.tier.pump(now_us)
@@ -478,6 +483,21 @@ class SharedHostTier:
       (:meth:`PrefixIndex.evict_owner_pages` keeps index↔store
       consistent).  Request-owned frames are never dropped — their
       payloads are not reconstructible — so only cache hit rate pays.
+
+    **Failure handling** (DESIGN.md §12, with a :class:`~repro.serving.
+    faults.FaultInjector` wired in): transient disk errors on the spill
+    path are retried up to ``disk_retries`` times with exponential
+    backoff charged to the tier clock; a frame whose read fails
+    permanently — or whose payload fails checksum verification — is
+    *quarantined*: its file is destroyed, prefix payloads are evicted
+    through their index (future matches re-derive via suffix
+    re-prefill) and request sequences are marked **lost** so the owning
+    engine restarts them from the prompt (:meth:`take_lost`).  When the
+    observed disk error rate crosses ``disk_error_rate_threshold`` the
+    tier *degrades*: all queued write-backs are cancelled (their data
+    never left DRAM) and the tier drops to the hard-cap path — already-
+    spilled frames stay promotable, no request is dropped.
+    :meth:`reclaim_domain` recycles a dead engine's frames whole.
     """
 
     def __init__(self, geometry: PoolGeometry, *, n_engines: int,
@@ -491,7 +511,11 @@ class SharedHostTier:
                  disk_read_us_per_page: float = 25.0,
                  disk_write_us_per_page: float = 25.0,
                  disk_seek_us: float = 100.0,
-                 link: Optional[LinkModel] = None) -> None:
+                 link: Optional[LinkModel] = None,
+                 injector: Optional[FaultInjector] = None,
+                 disk_retries: int = 3,
+                 retry_backoff_us: float = 50.0,
+                 disk_error_rate_threshold: float = 0.5) -> None:
         assert wb_queue_frames >= 1
         self.geo = geometry
         self.n_engines = n_engines
@@ -504,13 +528,27 @@ class SharedHostTier:
         self.disk_read_us_per_page = disk_read_us_per_page
         self.disk_write_us_per_page = disk_write_us_per_page
         self.disk_seek_us = disk_seek_us
-        self.spill_store = SpillStore(spill_dir) if self.spill_enabled \
-            else None
+        self.injector = injector
+        self.disk_retries = disk_retries
+        self.retry_backoff_us = retry_backoff_us
+        self.disk_error_rate_threshold = disk_error_rate_threshold
+        self.degraded = False
+        self.lost_seqs: Set[int] = set()
+        self._disk_ops = 0
+        self._disk_errors = 0
+        # Reentrancy guard for quarantine: evicting a quarantined owner
+        # through its index can touch keys in *other* spilled frames;
+        # those are dropped wholesale afterwards instead of recursing.
+        self._quarantine_depth = 0
+        self._quarantine_queue: List[int] = []
+        self.spill_store = SpillStore(spill_dir, injector=injector) \
+            if self.spill_enabled else None
         # The write-back buffer rides its own outbound DMA lane(s) on the
         # host link — same AsyncDMAEngine timeline model the engines use,
         # so spill traffic is µs-accounted like every other transfer.
         self.wb_dma = AsyncDMAEngine(link or LinkModel(),
-                                     n_channels=max(1, wb_lanes)) \
+                                     n_channels=max(1, wb_lanes),
+                                     injector=injector) \
             if self.spill_enabled else None
         self._pending_wb: Dict[int, float] = {}   # frame → disk-ready µs
         self._spilled: Dict[Key, int] = {}        # key → on-disk frame
@@ -521,6 +559,10 @@ class SharedHostTier:
             "promote_us": 0.0, "spill_write_us": 0.0,
             "spill_cancels": 0, "wb_peak_depth": 0,
             "hard_evicted_pages": 0,
+            "disk_errors": 0, "disk_retries": 0, "retry_backoff_us": 0.0,
+            "frames_quarantined": 0, "quarantined_pages": 0,
+            "quarantine_collateral_frames": 0,
+            "lost_seq_count": 0, "reclaimed_frames": 0, "degraded": 0,
         }
         self.share_prefix = share_prefix
         if share_prefix:
@@ -574,6 +616,16 @@ class SharedHostTier:
             return True
         return len(self._pending_wb) < self.wb_queue_frames
 
+    def take_lost(self, seq: int) -> bool:
+        """True exactly once per sequence whose request-owned host pages
+        were destroyed by a frame quarantine (§12) — the owning engine
+        checks this and restarts the request from its prompt (the
+        deterministic decoder makes the replay byte-identical)."""
+        if seq in self.lost_seqs:
+            self.lost_seqs.discard(seq)
+            return True
+        return False
+
     # --------------------------------------------------------- view hooks
 
     def before_read(self, key: Key) -> None:
@@ -590,6 +642,16 @@ class SharedHostTier:
     def before_remove(self, key: Key) -> None:
         f = self._spilled.get(key)
         if f is not None:
+            if self._quarantine_depth:
+                # A quarantine eviction is destroying this key anyway:
+                # don't promote (this frame may be corrupt too, and its
+                # chain-mates are mid-eviction) — defer a wholesale drop
+                # of the frame.  The key stays leased until then, so the
+                # caller's store.discard is a no-op.
+                self._spilled.pop(key, None)
+                if f not in self._quarantine_queue:
+                    self._quarantine_queue.append(f)
+                return
             self._promote_frame(f)
         f = self.frames.frame_of(key)
         if f is not None and f in self._pending_wb \
@@ -618,7 +680,8 @@ class SharedHostTier:
         self.wb_dma.drain(self._now_us)
         for f in sorted(f for f, t in self._pending_wb.items()
                         if t <= self._now_us):
-            self._persist(f)
+            if f in self._pending_wb:    # a degrade cancels mid-loop
+                self._persist(f)
         self._enforce_capacity()
 
     def flush(self) -> None:
@@ -633,11 +696,20 @@ class SharedHostTier:
                           self.wb_dma.busy_until()))
 
     def _persist(self, f: int) -> None:
-        del self._pending_wb[f]
         assert self.frames.state_of(f) == FRAME_PENDING_WB, f
         keys = sorted(self.frames.keys_of(f))
         pages = [(k, self.store.peek(*k)) for k in keys]
-        self.spill_store.write_frame(f, self.frames._frame_owner[f], pages)
+        owner = self.frames._frame_owner[f]
+        ok, _ = self._with_retries(
+            lambda: self.spill_store.write_frame(f, owner, pages))
+        if not ok:
+            # Retries exhausted (or the tier degraded mid-retry): the
+            # data never left DRAM — cancel the write-back and keep
+            # serving from the store.  Nothing is lost.
+            if f in self._pending_wb:
+                self._cancel_writeback(f)
+            return
+        del self._pending_wb[f]
         for k in keys:
             self.store.discard(*k)
             self._spilled[k] = f
@@ -649,6 +721,59 @@ class SharedHostTier:
         self._pending_wb.pop(f, None)
         self.frames.cancel_writeback(f)
         self.stats["spill_cancels"] += 1
+
+    # ------------------------------------------------------ failure model
+
+    def _with_retries(self, fn):
+        """Run a spill-store disk op with bounded retry + exponential
+        backoff charged to the tier clock (§12).  Returns ``(ok,
+        result)``; transient :class:`SpillIOError`\\ s are retried up to
+        ``disk_retries`` times, permanent errors (and exhaustion) yield
+        ``ok=False``.  :class:`SpillCorruptionError` is *not* retried —
+        re-reading corrupt bytes cannot help — and propagates to the
+        caller's quarantine path."""
+        delay = self.retry_backoff_us
+        for attempt in range(self.disk_retries + 1):
+            try:
+                out = fn()
+                self._note_disk(error=False)
+                return True, out
+            except SpillIOError as e:
+                self._note_disk(error=True)
+                if not e.transient or attempt >= self.disk_retries \
+                        or self.degraded:
+                    return False, None
+                self._now_us += delay
+                self.stats["disk_retries"] += 1
+                self.stats["retry_backoff_us"] += delay
+                delay *= 2.0
+        return False, None
+
+    def _note_disk(self, *, error: bool) -> None:
+        self._disk_ops += 1
+        if error:
+            self._disk_errors += 1
+            self.stats["disk_errors"] += 1
+        if (self.spill_enabled and not self.degraded
+                and self._disk_ops >= 4
+                and self._disk_errors / self._disk_ops
+                >= self.disk_error_rate_threshold):
+            self._degrade()
+
+    def _degrade(self) -> None:
+        """The graceful-degradation rule (§12): the disk is unhealthy,
+        so stop trusting it for *new* data — cancel every queued
+        write-back (payloads never left DRAM) and drop to the hard-cap
+        path.  Frames already spilled stay promotable on touch, parks
+        are no longer refused (the hard cap sheds prefix frames through
+        the index instead), and no request is dropped."""
+        if self.degraded:
+            return
+        self.degraded = True
+        self.spill_enabled = False
+        self.stats["degraded"] = 1
+        for f in list(self._pending_wb):
+            self._cancel_writeback(f)
 
     # --------------------------------------------------------- spill policy
 
@@ -705,9 +830,20 @@ class SharedHostTier:
         return stall
 
     def _promote_frame(self, f: int) -> float:
-        """SPILLED → HOST: whole-frame disk read back into the store."""
-        pages = self.spill_store.read_frame(
-            f, expect_domain=self.frames._frame_owner[f])
+        """SPILLED → HOST: whole-frame disk read back into the store.
+
+        An unreadable frame (permanent error, retries exhausted) or a
+        checksum mismatch quarantines instead of promoting — corrupted
+        payloads are never put back in the store, so they can never be
+        decoded from."""
+        try:
+            ok, pages = self._with_retries(
+                lambda: self.spill_store.read_frame(
+                    f, expect_domain=self.frames._frame_owner[f]))
+        except SpillCorruptionError:
+            ok, pages = False, None
+        if not ok:
+            return self._quarantine_frame(f)
         cost = self.disk_seek_us + len(pages) * self.disk_read_us_per_page
         for key, (kp, vp) in pages:
             self._spilled.pop(key, None)
@@ -722,6 +858,59 @@ class SharedHostTier:
         # (never the frame just promoted — it is the hottest by touch).
         self._enforce_capacity(protect=frozenset((f,)))
         return cost
+
+    def _quarantine_frame(self, f: int) -> float:
+        """A spill frame is unreadable or corrupt (§12): destroy it and
+        rebuild its contents from upstream truth.  The frame's keys
+        leave both lower tiers; prefix payloads are evicted through
+        their index so future matches re-derive (suffix re-prefill on
+        the next admission), and request sequences are marked *lost* so
+        the owning engine restarts them from the prompt.
+
+        Evicting an owner can cascade through its chain descendants
+        into *other* spilled frames; :meth:`before_remove` defers those
+        to ``_quarantine_queue`` (promoting mid-eviction would recurse
+        into this method and double-evict chain pages), and they are
+        dropped wholesale here once the triggering eviction unwinds.
+        Returns the modeled stall (the seek that discovered the failure
+        — backoff for any retries was already charged)."""
+        self._quarantine_depth += 1
+        try:
+            self._drop_quarantined(f, corrupt=True)
+            while self._quarantine_queue:
+                self._drop_quarantined(self._quarantine_queue.pop(),
+                                       corrupt=False)
+        finally:
+            self._quarantine_depth -= 1
+        return self.disk_seek_us
+
+    def _drop_quarantined(self, f: int, *, corrupt: bool) -> None:
+        """Destroy one spilled frame and re-sync every owner it held:
+        ``corrupt=False`` marks a collateral drop — a healthy frame
+        whose pages were chained to a quarantined owner."""
+        keys = sorted(self.frames.keys_of(f))
+        if corrupt:
+            self.spill_store.quarantine_frame(f)
+            self.stats["frames_quarantined"] += 1
+        else:
+            self.spill_store.delete_frame(f)
+            self.stats["quarantine_collateral_frames"] += 1
+        self.frames.promote(f)          # table-only: SPILLED → HOST
+        for k in keys:
+            self._spilled.pop(k, None)
+            self.frames.release(k)
+        for owner in sorted({k[0] for k in keys}):
+            idx = self._index_for_owner(owner)
+            if idx is not None:
+                # Losing any page breaks the chain: evict the whole
+                # owner through the index so index↔store stay in sync
+                # and descendants never match a hole (no-op for owners
+                # the triggering eviction already removed).
+                idx.evict_owner_pages({owner})
+            elif owner >= 0:
+                self.lost_seqs.add(owner)
+                self.stats["lost_seq_count"] += 1
+        self.stats["quarantined_pages"] += len(keys)
 
     def _hard_evict(self, protect: frozenset = frozenset()) -> None:
         """The no-spill baseline: shed over-capacity *prefix* frames by
@@ -772,6 +961,38 @@ class SharedHostTier:
                 self._cancel_writeback(f)
         return self.frames.migrate(keys, dst_engine)
 
+    # ------------------------------------------------------- crash reclaim
+
+    def reclaim_domain(self, domain: Domain) -> int:
+        """Reclaim every frame leased to ``domain`` whole (engine death,
+        §12).  The router calls this *after* the victim's preempted
+        bundles have migrated to survivors — whatever still belongs to
+        the dead engine's domain is unreachable state, recycled at
+        frame granularity exactly like a normal whole-frame return.
+        Prefix-domain frames are a different domain by construction and
+        survive untouched (parked KV outlives its parker).  Returns the
+        number of frames reclaimed."""
+        victims = sorted(f for f, d in self.frames._frame_owner.items()
+                         if d == domain)
+        for f in victims:
+            if f in self._pending_wb:
+                self._cancel_writeback(f)
+            keys = sorted(self.frames.keys_of(f))
+            if self.frames.state_of(f) == FRAME_SPILLED:
+                # Discard the on-disk frame wholesale — no need to read
+                # payloads that are about to be dropped.
+                self.frames.promote(f)      # table-only state flip
+                for k in keys:
+                    self._spilled.pop(k, None)
+                    self.frames.release(k)
+                self.spill_store.delete_frame(f)
+            else:
+                for k in keys:
+                    self.store.discard(*k)
+                    self.frames.release(k)
+        self.stats["reclaimed_frames"] += len(victims)
+        return len(victims)
+
     def check_invariants(self) -> None:
         self.frames.check_invariants()
         # Every stored payload is placed, in a DRAM-resident frame.
@@ -794,7 +1015,9 @@ class SharedHostTier:
             assert self.spill_store.has_frame(f)
         for f in self._pending_wb:
             assert self.frames.state_of(f) == FRAME_PENDING_WB, f
-        if self.spill_enabled:
+        if self.spill_store is not None:
+            # Guard on the store, not spill_enabled: a degraded tier
+            # (§12) still owns promotable on-disk frames.
             for f in self.spill_store.frame_ids():
                 assert self.frames.state_of(f) == FRAME_SPILLED, f
 
@@ -900,10 +1123,15 @@ class ServingCluster:
                  disk_read_us_per_page: float = 25.0,
                  disk_write_us_per_page: float = 25.0,
                  disk_seek_us: float = 100.0,
+                 fault_injector: Optional[FaultInjector] = None,
+                 disk_retries: int = 3,
+                 retry_backoff_us: float = 50.0,
+                 disk_error_rate_threshold: float = 0.5,
                  **engine_kw) -> None:
         assert n_engines >= 1
         self.cfg = cfg
         self.geo = geometry
+        self.fault_injector = fault_injector
         self.tier: Optional[SharedHostTier] = None
         if share_host:
             self.tier = SharedHostTier(
@@ -914,7 +1142,10 @@ class ServingCluster:
                 wb_lanes=wb_lanes,
                 disk_read_us_per_page=disk_read_us_per_page,
                 disk_write_us_per_page=disk_write_us_per_page,
-                disk_seek_us=disk_seek_us)
+                disk_seek_us=disk_seek_us,
+                injector=fault_injector, disk_retries=disk_retries,
+                retry_backoff_us=retry_backoff_us,
+                disk_error_rate_threshold=disk_error_rate_threshold)
         self.engines: List[ServingEngine] = []
         params = None
         for i in range(n_engines):
@@ -927,11 +1158,13 @@ class ServingCluster:
                               if self.tier and prefix_cache else None),
                 prefix_cache=prefix_cache,
                 prefix_capacity_pages=prefix_capacity_pages,
+                injector=fault_injector,
                 **engine_kw)
             params = eng.params          # replicas share one weight tree
             self.engines.append(eng)
         self.router = RequestRouter(self.engines, tier=self.tier,
-                                    policy=router_policy, migrate=migrate)
+                                    policy=router_policy, migrate=migrate,
+                                    injector=fault_injector)
 
     # ------------------------------------------------------------- serving
 
@@ -951,6 +1184,7 @@ class ServingCluster:
 
     def check_invariants(self) -> None:
         for e in self.engines:
-            e.cache.check_invariants()
+            if e.alive:                 # a crashed engine's device state
+                e.cache.check_invariants()   # is gone by definition
         if self.tier is not None:
             self.tier.check_invariants()

@@ -127,10 +127,14 @@ class AsyncDMAEngine:
     """
 
     def __init__(self, link: Optional[LinkModel] = None,
-                 n_channels: int = 2, duplex: bool = True):
+                 n_channels: int = 2, duplex: bool = True,
+                 injector=None):
         assert n_channels >= 1
         self.link = link or LinkModel()
         self.duplex = duplex
+        # Failure model (DESIGN.md §12): an injector may stall a lane —
+        # the job (and its channel) finishes late by the injected µs.
+        self.injector = injector
         free_in = [0.0] * n_channels
         # Half-duplex shares the *same list object*, so either direction's
         # enqueue occupies the single per-channel timeline.
@@ -149,6 +153,7 @@ class AsyncDMAEngine:
             "pages_out": 0, "dma_count_out": 0, "bytes_out": 0,
             "transfer_us_out": 0.0, "hidden_us_out": 0.0,
             "exposed_us_out": 0.0, "queue_us_out": 0.0,
+            "injected_stall_us": 0.0,
         }
 
     @staticmethod
@@ -170,6 +175,14 @@ class AsyncDMAEngine:
         ch = min(range(len(free)), key=lambda c: free[c])
         start = max(float(now_us), free[ch])
         done = start + batch.transfer_us
+        if self.injector is not None:
+            # An injected lane stall delays this job's completion and
+            # occupies the channel for the extra µs (a throttled lane
+            # backs up everything queued behind it).
+            extra = self.injector.dma_stall(kind, direction)
+            if extra:
+                done += extra
+                self.stats["injected_stall_us"] += extra
         free[ch] = done
         job = DMAJob(job_id=next(self._ids), keys=list(keys), batch=batch,
                      start_us=start, done_us=done, payloads=list(payloads),

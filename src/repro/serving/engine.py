@@ -160,6 +160,12 @@ class EngineStats:
     # off through the shared host tier, never re-prefilled.
     migrations_out: int = 0
     migrations_in: int = 0
+    # Failure recovery (DESIGN.md §12): requests restarted from the
+    # prompt after a spill quarantine destroyed their swapped-out
+    # payloads, and cache-hit admissions that fell back to full prefill
+    # because the matched prefix payloads were quarantined mid-admission.
+    lost_restarts: int = 0
+    prefix_rederives: int = 0
     # Deadline accounting per priority tier (ROADMAP follow-up): a
     # request with a deadline counts as a hit when it completes with
     # ``clock_us <= deadline_us`` on the engine's modeled clock.
@@ -244,6 +250,9 @@ class EngineStats:
         if self.migrations_out or self.migrations_in:
             line += (f" | migrated {self.migrations_out} out / "
                      f"{self.migrations_in} in")
+        if self.lost_restarts or self.prefix_rederives:
+            line += (f" | quarantine: {self.lost_restarts} restarts, "
+                     f"{self.prefix_rederives} prefix re-derives")
         att = self.slo_attainment()
         if att is not None:
             tiers = sorted(set(self.deadline_hits) | set(self.deadline_misses),
@@ -272,13 +281,25 @@ class ServingEngine:
                  slo_urgency_us: float = 1000.0,
                  host: Optional[HostPageStore] = None,
                  prefix_index: Optional[PrefixIndex] = None,
-                 engine_id: int = 0):
-        assert fault_mode in ("async", "sync"), fault_mode
-        assert victim_policy in ("cost", "priority"), victim_policy
+                 engine_id: int = 0,
+                 injector=None):
+        # ValueError, not assert: configuration validation must survive
+        # ``python -O`` (asserts compile away under optimization).
+        if fault_mode not in ("async", "sync"):
+            raise ValueError(
+                f"fault_mode must be 'async' or 'sync', got {fault_mode!r}")
+        if victim_policy not in ("cost", "priority"):
+            raise ValueError(
+                f"victim_policy must be 'cost' or 'priority', "
+                f"got {victim_policy!r}")
         self.cfg = cfg
         # Replica identity within a cluster (DESIGN.md §10): the host-tier
         # frame-lease protection domain and the reporting label.
         self.engine_id = engine_id
+        # Failure model (DESIGN.md §12): False after an injected crash —
+        # the router stops dispatching here and recovers the workload.
+        self.alive = True
+        self.injector = injector
         self.fault_mode = fault_mode
         self.victim_policy = victim_policy
         # Full-duplex outbound modeling (DESIGN.md §8): eviction gathers
@@ -374,7 +395,7 @@ class ServingEngine:
         # is modeled µs: advanced by measured decode wall time (compute
         # the transfers hide behind) and by exposed fault stalls.
         self.dma = AsyncDMAEngine(self.link, n_channels=dma_channels,
-                                  duplex=duplex)
+                                  duplex=duplex, injector=injector)
         self.staging = StagingBuffer()
         self.prefetch = Prefetcher(depth=prefetch_depth)
         self._clock_us = 0.0
@@ -652,7 +673,16 @@ class ServingEngine:
         return self._free_pages_total() >= len(self.active) + 2
 
     def _resume(self, req: Request) -> bool:
-        """Re-map a preempted request; payloads fault in on next touch."""
+        """Re-map a preempted request; payloads fault in on next touch.
+
+        If the tier quarantined a spill frame holding this request's
+        swapped-out payloads (DESIGN.md §12), the saved state is
+        unusable — restart from the prompt instead.  The deterministic
+        decoder makes the replay byte-identical to an unfaulted run."""
+        if self.host.take_lost(req.rid):
+            self._forget_request(req)
+            self.stats.lost_restarts += 1
+            return self._admit_one(req)
         tokens = self._saved_tokens[req.rid]
         if not self._alloc_with_preemption(req, tokens,
                                            below_priority=req.priority):
@@ -665,6 +695,34 @@ class ServingEngine:
         self.host.note_swap_in()
         self.stats.swaps_in += 1
         return True
+
+    def _forget_request(self, r: Request) -> None:
+        """Erase every trace of a request whose saved payloads were lost
+        to a spill quarantine (§12) so it can restart from the prompt:
+        device pages, decode state, host copies, staged and in-flight
+        prefetches, saved token count, and any tokens already emitted."""
+        self.cache.free(r.rid)
+        self.states.pop(r.rid, None)
+        self.host.drop_seq(r.rid)
+        self.host.take_lost(r.rid)   # clear a flag re-set during the drop
+        dropped = self.staging.invalidate_seq(r.rid)
+        self.stats.prefetch_wasted += dropped
+        self.prefetch.stats["wasted_pages"] += dropped
+        self.prefetch.cancel_seq(r.rid)
+        self._saved_tokens.pop(r.rid, None)
+        r.out.clear()
+        r.done = False
+
+    def _restart_lost(self, rids: set) -> None:
+        """Pull active requests whose payloads a quarantine destroyed
+        out of the batch and re-queue them from the prompt (head of the
+        queue: they are the oldest work).  Deterministic decode makes
+        the replay byte-identical to an unfaulted run."""
+        for r in [r for r in self.active if r.rid in rids]:
+            self.active.remove(r)
+            self._forget_request(r)
+            self.queue.appendleft(r)
+            self.stats.lost_restarts += 1
 
     def _admit_one(self, req: Request) -> bool:
         ptok = self.geo.page_tokens
@@ -679,18 +737,33 @@ class ServingEngine:
 
     # --------------------------------------------------- demand fault-in
 
-    def _fault_in(self, seqs: List[int]) -> None:
+    def _fault_in(self, seqs: List[int]) -> set:
         """touch() this step's pages; fault the missing ones in (blocking
-        under ``fault_mode="sync"``, staged/overlapped under ``"async"``)."""
+        under ``fault_mode="sync"``, staged/overlapped under ``"async"``).
+        Returns the rids whose payloads were lost to a spill quarantine
+        during the promote (§12) — their entries were skipped and the
+        caller must restart them."""
         if self.fault_mode == "sync":
-            self._fault_in_sync(seqs)
-        else:
-            self._fault_in_async(seqs)
+            return self._fault_in_sync(seqs)
+        return self._fault_in_async(seqs)
 
-    def _promote_missing(self, missing: Dict) -> None:
+    @staticmethod
+    def _drop_lost_entries(missing: Dict, lost: set) -> Dict:
+        """Remove a lost rid's entries from a missing-pages map — their
+        host payloads no longer exist, so they must not be popped."""
+        if not lost:
+            return missing
+        return {s: kept for s, entries in missing.items()
+                if (kept := [e for e in entries if e[1] not in lost])}
+
+    def _promote_missing(self, missing: Dict) -> set:
         """Before popping payloads, promote any spilled frames the step's
         misses live in (DESIGN.md §11) — the modeled disk-read stall is
-        exposed time, charged to the clock like a demand fault."""
+        exposed time, charged to the clock like a demand fault.
+
+        Returns the rids whose payloads the promote *destroyed* (frame
+        quarantine after corruption or a permanent disk error, §12):
+        the caller must skip their entries and restart them."""
         keys = [(owner, s, vpn) for s, entries in missing.items()
                 for _ppn, owner, vpn in entries]
         promote_us = self.host.ensure_resident(keys, now_us=self._clock_us)
@@ -698,6 +771,8 @@ class ServingEngine:
             self._clock_us += promote_us
             self.stats.promote_stall_us += promote_us
             self.stats.promotions += 1
+        return {k[0] for k in keys
+                if k[0] >= 0 and self.host.take_lost(k[0])}
 
     def _scatter_pages(self, gidx: List[int],
                        payloads: List[Tuple[np.ndarray, np.ndarray]]
@@ -715,13 +790,16 @@ class ServingEngine:
             pool, idx, pages, use_pallas=self.use_pallas))(v, vp)
         self.pools = (k, v)
 
-    def _fault_in_sync(self, seqs: List[int]) -> None:
+    def _fault_in_sync(self, seqs: List[int]) -> set:
         """PR 1's blocking path: the whole batch stalls on the transfer,
         so every µs is exposed."""
         missing = self.cache.missing_pages(seqs)
         if not missing:
-            return
-        self._promote_missing(missing)
+            return set()
+        lost = self._promote_missing(missing)
+        missing = self._drop_lost_entries(missing, lost)
+        if not missing:
+            return lost
         pps = self.cache.pages_per_shard
         gidx: List[int] = []
         payloads: List[Tuple[np.ndarray, np.ndarray]] = []
@@ -741,8 +819,9 @@ class ServingEngine:
         self.stats.fault_steps += 1
         self._clock_us += step_us       # the whole transfer stalls the step
         self._scatter_pages(gidx, payloads)
+        return lost
 
-    def _fault_in_async(self, seqs: List[int]) -> None:
+    def _fault_in_async(self, seqs: List[int]) -> set:
         """Stage 1 of the pipeline: serve this step's misses from the
         staging region (hidden), stall on in-flight prefetches (partially
         hidden), and demand-fault only the never-predicted remainder
@@ -750,8 +829,9 @@ class ServingEngine:
         shared-channel contention is part of the model)."""
         missing = self.cache.missing_pages(seqs)
         if not missing:
-            return
-        self._promote_missing(missing)
+            return set()
+        lost = self._promote_missing(missing)
+        missing = self._drop_lost_entries(missing, lost)
         pps = self.cache.pages_per_shard
         now = self._clock_us
         gidx: List[int] = []
@@ -823,6 +903,7 @@ class ServingEngine:
         self.stats.fault_hidden_us = self.dma.stats["hidden_us"]
         self._clock_us = now
         self._scatter_pages(gidx, payloads)
+        return lost
 
     # --------------------------------------------- async prefetch pipeline
 
@@ -949,20 +1030,25 @@ class ServingEngine:
         t0 = time.perf_counter()
         T = len(req.prompt)
         match = self._match_prefix(req)
-        if match:
-            promote_us = self._prefill_suffix(req, match)
+        promote_us = self._prefill_suffix(req, match) if match else None
+        if promote_us is not None:
             self.stats.admit_hits += 1
             self.stats.admit_hit_us += (time.perf_counter() - t0) * 1e6
             model_us = (T - len(match) * self.geo.page_tokens) \
                 * self.prefill_us_per_token + promote_us
         else:
+            if match:
+                # The matched payloads were quarantined mid-admission
+                # (§12): fall back to full prefill — the prefix will be
+                # re-derived (re-parked) when this request completes.
+                self.stats.prefix_rederives += 1
             self._prefill_full(req)
             self.stats.admit_colds += 1
             self.stats.admit_cold_us += (time.perf_counter() - t0) * 1e6
             model_us = T * self.prefill_us_per_token
         self.stats.admit_lat_us.append(model_us)
 
-    def _prefill_suffix(self, req: Request, pages) -> float:
+    def _prefill_suffix(self, req: Request, pages) -> Optional[float]:
         """Cache-hit admission (DESIGN.md §8): restore the matched prefix
         pages through the host tier instead of recomputing them, and
         forward only the suffix (queries attend over the cached KV).
@@ -979,7 +1065,11 @@ class ServingEngine:
         reads, and the modeled disk stall — returned to the caller —
         advances the engine clock and the admission latency sample.
         Spill on/off changes only this timing, never the payload bytes,
-        so tokens stay byte-identical."""
+        so tokens stay byte-identical.
+
+        Returns None — *before* any request-visible side effect — when
+        the promote quarantined a matched page's payload (§12): the
+        caller falls back to full prefill and re-derives the prefix."""
         ptok = self.geo.page_tokens
         T = len(req.prompt)
         P = len(pages) * ptok
@@ -987,6 +1077,9 @@ class ServingEngine:
         promote_us = self.host.ensure_resident(
             [(pg.owner, pg.shard, pg.vpn) for pg in pages],
             now_us=self._clock_us)
+        if any(not self.host.has(pg.owner, pg.shard, pg.vpn)
+               for pg in pages):
+            return None
         if promote_us:
             self._clock_us += promote_us
             self.stats.promote_stall_us += promote_us
@@ -1198,6 +1291,8 @@ class ServingEngine:
         """One engine iteration as a two-stage pipeline: drain completed
         prefetches → admit → fault remaining misses (exposed) → decode
         while the next step's prefetch is in flight → retire."""
+        if not self.alive:
+            return False        # a crashed engine does no work (§12)
         t0 = time.perf_counter()
         # Advance the host tier's write-back pipeline to the engine clock
         # (DESIGN.md §11): frames whose spill completed during previous
@@ -1239,7 +1334,17 @@ class ServingEngine:
         self._run_compaction()
         # touch() the pages this step's packed tables will read and
         # batch-fault the missing ones in from the host tier.
-        self._fault_in(seqs)
+        lost = self._fault_in(seqs)
+        if lost:
+            # A spill quarantine destroyed some batch members' payloads
+            # mid-promote (§12): restart them from the prompt and decode
+            # the survivors this step.
+            self._restart_lost(lost)
+            runnable = [r for r in runnable if r.rid not in lost]
+            seqs = [r.rid for r in runnable]
+            if not runnable:
+                self.stats.wall_s += time.perf_counter() - t0
+                return bool(self.active or self.queue or self.preempted)
         ctx = self._ctx_global(self.cache.pack_ctx(seqs, self.mpps))
         if self.fault_mode == "async":
             # Stage 2: predicted next-step touches ride the DMA channels

@@ -52,11 +52,18 @@ class RouterStats:
     migrations: int = 0
     migrated_pages: int = 0
     steal_rounds: int = 0            # steal scans that found a candidate
+    # Failure recovery (DESIGN.md §12): injected engine deaths, preempted
+    # bundles re-homed to survivors (zero re-prefill), and in-flight or
+    # queued victims re-dispatched from the prompt.
+    crashes: int = 0
+    recovered_bundles: int = 0
+    recovered_requeued: int = 0
 
 
 class RequestRouter:
     def __init__(self, engines: List[ServingEngine], *, tier=None,
-                 policy: str = "slack", migrate: bool = True) -> None:
+                 policy: str = "slack", migrate: bool = True,
+                 injector=None) -> None:
         assert policy in ("slack", "fifo"), policy
         assert engines
         self.engines = engines
@@ -65,11 +72,18 @@ class RequestRouter:
         # Work stealing needs the shared tier: the bundle is host-side
         # state, and the payload bytes must be visible to the thief.
         self.migrate = migrate and tier is not None
+        # Failure injection (DESIGN.md §12): scheduled engine crashes
+        # fire at the start of their router step.
+        self.injector = injector
+        self._step_no = 0
         self.pending: List[Tuple[int, Request]] = []    # (arrival, req)
         self._arrival = itertools.count()
         self._rr = 0                                    # fifo round-robin
         self._owner: Dict[int, int] = {}                # rid → engine idx
         self.stats = RouterStats()
+
+    def _live(self) -> List[ServingEngine]:
+        return [e for e in self.engines if e.alive]
 
     # ------------------------------------------------------------- submit
 
@@ -115,15 +129,19 @@ class RequestRouter:
     def dispatch(self) -> None:
         if not self.pending:
             return
+        live = [i for i, e in enumerate(self.engines) if e.alive]
+        assert live, "no live engine to dispatch to"
         if self.policy == "slack":
             order = sorted(self.pending, key=self._rank)
             for _, req in order:
-                idx = min(range(len(self.engines)),
+                idx = min(live,
                           key=lambda i: (self.engine_load(self.engines[i]),
                                          i))
                 self._assign(req, idx)
         else:                           # fifo: arrival order, round-robin
             for _, req in sorted(self.pending):
+                while not self.engines[self._rr].alive:
+                    self._rr = (self._rr + 1) % len(self.engines)
                 self._assign(req, self._rr)
                 self._rr = (self._rr + 1) % len(self.engines)
         self.pending.clear()
@@ -131,9 +149,15 @@ class RequestRouter:
     # ------------------------------------------------------------- stepping
 
     def _busy(self, eng: ServingEngine) -> bool:
+        if not eng.alive:
+            return False
         return bool(eng.queue or eng.active or eng.preempted)
 
     def step(self) -> bool:
+        if self.injector is not None:
+            for idx in self.injector.crashes_due(self._step_no):
+                self._crash(idx)
+        self._step_no += 1
         self.dispatch()
         progressed = False
         for eng in self.engines:
@@ -141,8 +165,9 @@ class RequestRouter:
                 progressed = bool(eng.step()) or progressed
         # One cluster wall clock: idle replicas' modeled clocks advance
         # with the busy ones, so slack/deadlines agree everywhere.
-        now = max(e._clock_us for e in self.engines)
-        for e in self.engines:
+        live = self._live()
+        now = max(e._clock_us for e in live)
+        for e in live:
             e._clock_us = max(e._clock_us, now)
         if self.migrate:
             self._steal()
@@ -150,17 +175,87 @@ class RequestRouter:
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
         steps = 0
-        while (self.pending or any(self._busy(e) for e in self.engines)) \
-                and steps < max_steps:
+        while self.pending or any(self._busy(e) for e in self.engines):
+            if steps >= max_steps:
+                # Livelock detection: silently returning here used to
+                # hand callers a half-drained cluster that looked done.
+                stuck = sorted(
+                    r.rid for e in self.engines
+                    for r in list(e.queue) + list(e.active)
+                    + list(e.preempted)
+                    if e.alive) + sorted(r.rid for _, r in self.pending)
+                raise RuntimeError(
+                    f"run_until_drained: {len(stuck)} request(s) still "
+                    f"outstanding after max_steps={max_steps} (rids "
+                    f"{stuck[:16]}{'…' if len(stuck) > 16 else ''}) — "
+                    f"the cluster is livelocked, or max_steps is too "
+                    f"small for this workload")
             self.step()
             steps += 1
-        for e in self.engines:
+        for e in self._live():
             if e.fault_mode == "async" and not self._busy(e):
                 # Settle transfers still riding the channels (same rule
                 # as ServingEngine.run_until_drained).
                 e._clock_us = max(e._clock_us, e.dma.busy_until())
                 e._drain_prefetches()
         return steps
+
+    # ------------------------------------------------------ crash recovery
+
+    def _crash(self, idx: int) -> None:
+        """Kill engine ``idx`` and recover its workload (DESIGN.md §12).
+
+        Its device state (pools, staging, in-flight DMA) is gone by
+        definition.  What survives is host-side, per protection domain:
+
+        * **Preempted (and held) requests** are pure host-side bundles —
+          Request + decode state + saved tokens, payloads in the shared
+          store.  Each migrates to the least-loaded survivor through the
+          existing export → ``migrate_seq`` → import path and resumes
+          with **zero re-prefill**, byte-identical tokens.
+        * **In-flight and queued requests** lose their device KV:
+          they re-dispatch from the prompt (cleared outputs) — the
+          deterministic decoder replays the same tokens.
+        * The dead domain's remaining host frames are reclaimed whole
+          (:meth:`SharedHostTier.reclaim_domain`); prefix-domain frames
+          belong to a different domain by construction and survive.
+        """
+        victim = self.engines[idx]
+        if not victim.alive:
+            return
+        victim.alive = False
+        self.stats.crashes += 1
+        live = self._live()
+        if not live:
+            raise RuntimeError(
+                f"engine {victim.engine_id} crashed with no survivor — "
+                f"the cluster cannot recover")
+        victim.preempted.extend(victim._held)
+        victim._held.clear()
+        if self.tier is not None:
+            for r in list(victim.preempted):
+                bundle = victim.export_preempted(r.rid)
+                dst = min(live, key=lambda e: (self.engine_load(e),
+                                               e.engine_id))
+                self.tier.migrate_seq(r.rid, dst.engine_id)
+                dst.import_preempted(bundle)
+                self._owner[r.rid] = self.engines.index(dst)
+                self.stats.recovered_bundles += 1
+        requeue = list(victim.active) + list(victim.preempted) \
+            + list(victim.queue)
+        victim.active.clear()
+        victim.preempted.clear()
+        victim.queue.clear()
+        victim.states.clear()
+        victim._saved_tokens.clear()
+        for r in requeue:
+            r.out.clear()
+            r.done = False
+            self._owner.pop(r.rid, None)
+            self.pending.append((next(self._arrival), r))
+            self.stats.recovered_requeued += 1
+        if self.tier is not None:
+            self.tier.reclaim_domain(victim.engine_id)
 
     # --------------------------------------------------------- work stealing
 
@@ -185,10 +280,10 @@ class RequestRouter:
         """At most one migration per router step (keeps the schedule
         deterministic and easy to reason about; pressure that persists
         steals again next step)."""
-        dsts = sorted(self.engines,
+        dsts = sorted(self._live(),
                       key=lambda e: (self.engine_load(e), e.engine_id))
         for dst in dsts:
-            for src in sorted(self.engines,
+            for src in sorted(self._live(),
                               key=lambda e: (-self.engine_load(e),
                                              e.engine_id)):
                 if src is dst or not src.preempted:

@@ -511,3 +511,60 @@ def test_engine_wall_clock_survives_wall_time_jumps(monkeypatch):
     assert r.done
     assert eng.stats.wall_s > 0.0
     assert eng.stats.tok_per_s() > 0.0
+
+
+def test_frame_table_invariants_under_randomized_failure_sequences():
+    """Property test (seeded, DESIGN.md §12): random interleavings of
+    page placement, write-back pumping, spill/promote, sequence
+    migration, whole-sequence drops, and whole-domain crash reclaim
+    keep HostFrameTable.check_invariants() (and the tier's stronger
+    cross-tier checks) true after every operation."""
+    rng = np.random.default_rng(11)
+    geo = PoolGeometry(page_tokens=8, frame_pages=2, compact_threshold=0.4)
+    tier = SharedHostTier(geo, n_engines=3, capacity_frames=4, spill=True)
+    home = {}                                  # seq → owning domain
+    next_vpn = {}                              # seq → next fresh page
+    for _ in range(250):
+        op = int(rng.integers(0, 7))
+        if op <= 1 or not home:                # place a fresh page
+            seq = int(rng.integers(0, 12))
+            d = home.setdefault(seq, int(rng.integers(0, 3)))
+            vpn = next_vpn.get(seq, 0)
+            tier.view(d).put(seq, 0, vpn, *_payload(float(seq + vpn)))
+            next_vpn[seq] = vpn + 1
+        elif op == 2:                          # advance the pump
+            tier.pump(tier._now_us + float(rng.integers(1, 5000)))
+        elif op == 3:                          # settle every write-back
+            tier.flush()
+        elif op == 4 and tier._spilled:        # promote-on-touch
+            key = sorted(tier._spilled)[
+                int(rng.integers(0, len(tier._spilled)))]
+            tier.ensure_resident([key])
+        elif op == 5:                          # migrate a sequence
+            seq = sorted(home)[int(rng.integers(0, len(home)))]
+            dst = int(rng.integers(0, 3))
+            if dst != home[seq]:
+                tier.migrate_seq(seq, dst)
+                home[seq] = dst
+        else:                                  # crash: reclaim a domain
+            d = int(rng.integers(0, 3))
+            if rng.random() < 0.5:
+                tier.reclaim_domain(d)
+                for seq in [s for s, dd in home.items() if dd == d]:
+                    home.pop(seq)
+                    next_vpn.pop(seq, None)
+            elif home:                         # or drop one sequence
+                seq = sorted(home)[int(rng.integers(0, len(home)))]
+                tier.view(home.pop(seq)).drop_seq(seq)
+                next_vpn.pop(seq, None)
+        tier.frames.check_invariants()
+        tier.check_invariants()
+        for seq, d in home.items():            # leases track the tracker
+            for k in tier.seq_pages(seq):
+                assert tier.frames.owner_of(k) == d
+    assert tier.stats["spilled_frames"] > 0
+    assert tier.stats["promoted_frames"] > 0
+    assert tier.stats["reclaimed_frames"] > 0
+    tier.flush()
+    tier.check_invariants()
+    tier.spill_store.close()

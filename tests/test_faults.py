@@ -1,0 +1,293 @@
+"""Failure injection & recovery tests (DESIGN.md §12).
+
+Covers the seeded FaultPlan/FaultInjector, spill-store checksum
+integrity (bit flips caught before any payload is returned), transient
+disk-error retry with modeled backoff, permanent-error / corruption
+quarantine (prefix re-derive, request sequences marked lost), graceful
+degradation to the hard-cap path on a rising error rate, whole-domain
+crash reclaim (prefix frames survive), orphan sweep + context-manager
+cleanup of the spill directory, the router's livelock RuntimeError, and
+end-to-end engine-crash recovery with byte-identical tokens.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.serving.cluster import (FRAME_HOST, FRAME_SPILLED,
+                                   PREFIX_DOMAIN, ServingCluster,
+                                   SharedHostTier)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import (FaultInjector, FaultPlan,
+                                  SpillCorruptionError, SpillIOError)
+from repro.serving.host_tier import SpillStore
+
+GEO = PoolGeometry(page_tokens=8, frame_pages=2, compact_threshold=0.4)
+
+
+def _payload(tag: float):
+    return (np.full((2, 3), tag, np.float32),
+            np.full((2, 3), -tag, np.float32))
+
+
+def _tier(**kw):
+    kw.setdefault("capacity_frames", 2)
+    return SharedHostTier(GEO, n_engines=1, **kw)
+
+
+def _fill(view, seq, n, tag0=0.0):
+    for i in range(n):
+        view.put(seq, 0, i, *_payload(tag0 + i))
+
+
+# ----------------------------------------------------------- fault plan
+
+
+def test_injector_is_deterministic_per_seed():
+    plan = FaultPlan(disk_write_error_rate=0.5, corrupt_write_rate=0.5,
+                     max_transient_failures=100)
+    logs = []
+    for _ in range(2):
+        inj = FaultInjector(plan)
+        for f in range(20):
+            try:
+                inj.disk_write_fault(f)
+            except SpillIOError:
+                pass
+            inj.corrupt_written(f, b"payload-bytes")
+        logs.append(list(inj.log))
+    assert logs[0] == logs[1] and logs[0]     # same seed ⇒ same faults
+
+
+def test_injector_crashes_fire_once():
+    inj = FaultInjector(FaultPlan(engine_crashes=((3, 0), (3, 1), (5, 0))))
+    assert inj.crashes_due(2) == []
+    assert inj.crashes_due(3) == [0, 1]
+    assert inj.crashes_due(4) == []           # already fired
+    assert inj.crashes_due(9) == [0]          # late check still fires 5
+    assert inj.stats["engine_crashes"] == 3
+
+
+def test_transient_failures_bounded_per_frame_and_op():
+    inj = FaultInjector(FaultPlan(disk_read_error_rate=1.0,
+                                  max_transient_failures=2))
+    fails = 0
+    for _ in range(5):
+        try:
+            inj.disk_read_fault(7)
+        except SpillIOError as e:
+            assert e.transient and e.frame == 7
+            fails += 1
+    assert fails == 2                         # then reads succeed
+
+
+# ---------------------------------------------------- spill-store integrity
+
+
+def test_spillstore_checksum_catches_bit_flip():
+    inj = FaultInjector(FaultPlan(corrupt_frames=(7,)))
+    store = SpillStore(injector=inj)
+    kp = np.arange(12, dtype=np.float32).reshape(3, 4)
+    store.write_frame(7, "dom", [((5, 0, 0), (kp, -kp))])
+    store.write_frame(8, "dom", [((5, 0, 1), (kp + 1, kp - 1))])
+    with pytest.raises(SpillCorruptionError):
+        store.read_frame(7)
+    assert store.stats["checksum_failures"] == 1
+    assert store.stats["frames_read"] == 0    # nothing returned
+    back = store.read_frame(8)                # healthy frame unaffected
+    assert np.array_equal(back[0][1][0], kp + 1)
+    store.quarantine_frame(7)
+    assert not store.has_frame(7)
+    assert store.stats["frames_quarantined"] == 1
+    store.close()
+
+
+def test_spillstore_write_fault_leaves_store_unchanged():
+    inj = FaultInjector(FaultPlan(disk_write_error_rate=1.0,
+                                  max_transient_failures=1))
+    store = SpillStore(injector=inj)
+    pages = [((5, 0, 0), _payload(1.0))]
+    with pytest.raises(SpillIOError):
+        store.write_frame(3, None, pages)
+    assert len(store) == 0 and store.stats["frames_written"] == 0
+    store.write_frame(3, None, pages)         # transient budget spent
+    assert store.has_frame(3)
+    store.close()
+
+
+def test_spillstore_sweeps_orphans_and_cleans_up_as_context_manager(
+        tmp_path):
+    root = str(tmp_path / "spill")
+    os.makedirs(root)
+    orphan = os.path.join(root, "frame_00000042.npz")
+    with open(orphan, "wb") as f:
+        f.write(b"stale bytes from a crashed run")
+    store = SpillStore(root)
+    assert store.stats["orphans_swept"] == 1 and not os.path.exists(orphan)
+    store.close()
+    with SpillStore() as owned:
+        owned.write_frame(0, None, [((1, 0, 0), _payload(2.0))])
+        d = owned._dir
+        assert d is not None and os.path.isdir(d)
+    assert not os.path.isdir(d)               # owned temp dir removed
+
+
+# ------------------------------------------------------- tier failure paths
+
+
+def test_tier_retries_transient_read_errors_with_backoff():
+    inj = FaultInjector(FaultPlan(disk_read_error_rate=1.0,
+                                  max_transient_failures=2))
+    tier = _tier(injector=inj, disk_retries=3, retry_backoff_us=50.0,
+                 disk_error_rate_threshold=2.0)   # isolate the retry path
+    v = tier.view(0)
+    _fill(v, 9, 8)                  # 4 frames over capacity 2
+    tier.flush()
+    key = sorted(tier._spilled)[0]
+    kp, _ = v.peek(*key)            # promote: fails twice, then succeeds
+    assert np.array_equal(kp, _payload(float(key[2]))[0])
+    assert tier.stats["disk_retries"] == 2
+    assert tier.stats["retry_backoff_us"] == 50.0 + 100.0  # exponential
+    assert tier.stats["promoted_frames"] == 1
+    assert tier.stats["frames_quarantined"] == 0
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_tier_quarantines_permanently_unreadable_request_frame():
+    inj = FaultInjector(FaultPlan(permanent_read_frames=(0, 1, 2, 3)))
+    tier = _tier(injector=inj, disk_error_rate_threshold=2.0)
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    key = sorted(tier._spilled)[0]
+    stall = tier.ensure_resident([key])
+    assert stall == tier.disk_seek_us         # the discovering seek
+    assert not v.has(*key)                    # payload gone, not decoded
+    assert tier.stats["frames_quarantined"] == 1
+    assert 9 in tier.lost_seqs
+    assert tier.take_lost(9) and not tier.take_lost(9)   # exactly once
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_tier_quarantines_corrupt_frame_before_any_decode():
+    inj = FaultInjector(FaultPlan(corrupt_write_rate=1.0))
+    tier = _tier(injector=inj, disk_error_rate_threshold=2.0)
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    n_spilled = len({f for f in tier._spilled.values()})
+    tier.ensure_resident(sorted(tier._spilled))
+    ss = tier.spill_store.stats
+    assert ss["checksum_failures"] == n_spilled       # 100 % detection
+    assert ss["frames_read"] == 0                     # never decoded from
+    assert tier.stats["frames_quarantined"] == n_spilled
+    assert tier.lost_seqs == {9}
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_tier_degrades_to_hard_cap_on_disk_error_rate():
+    inj = FaultInjector(FaultPlan(disk_write_error_rate=1.0,
+                                  max_transient_failures=10 ** 6))
+    tier = _tier(injector=inj, disk_retries=3)
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    assert tier.degraded and tier.stats["degraded"] == 1
+    assert not tier.spill_enabled             # dropped to hard-cap path
+    assert tier.stats["disk_retries"] >= 1    # backoff was exercised
+    assert tier.stats["spilled_frames"] == 0  # nothing ever left DRAM
+    assert len(tier._pending_wb) == 0         # queue cancelled, not stuck
+    assert tier.park_allowed()                # hard cap sheds, not refuses
+    for i in range(8):                        # zero data loss
+        assert np.array_equal(v.peek(9, 0, i)[0], _payload(float(i))[0])
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_reclaim_domain_recycles_whole_frames_and_spares_prefix():
+    tier = _tier()
+    pv = tier.view(PREFIX_DOMAIN)
+    pv.put(-1, 0, 0, *_payload(50.0))
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    assert tier.stats["spilled_frames"] >= 1
+    n = tier.reclaim_domain(0)
+    assert n >= 1
+    assert tier.seq_pages(9) == []            # DRAM *and* disk cleared
+    assert all(d == PREFIX_DOMAIN
+               for d in tier.frames._frame_owner.values())
+    assert (-1, 0, 0) in tier.seq_pages(-1)   # parked KV outlives domain 0
+    assert tier.stats["reclaimed_frames"] == n
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+# ------------------------------------------------------------ router & engine
+
+
+def test_run_until_drained_raises_on_livelock():
+    from repro.serving.router import RequestRouter
+
+    class Eng:
+        alive = True
+        engine_id = 0
+        queue: list = []
+        active: list = []
+        preempted: list = []
+
+    router = RequestRouter([Eng()], tier=None, migrate=False)
+    router.submit(Request(rid=1, tenant=0,
+                          prompt=np.zeros(4, np.int32), max_new=1))
+    with pytest.raises(RuntimeError, match="still outstanding"):
+        router.run_until_drained(max_steps=0)
+
+
+def test_engine_rejects_bad_modes_with_value_error():
+    cfg = get_smoke_config("qwen2.5-3b")
+    with pytest.raises(ValueError, match="fault_mode"):
+        ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                      fault_mode="magic")
+    with pytest.raises(ValueError, match="victim_policy"):
+        ServingEngine(cfg, geometry=GEO, max_batch=2, max_seq=64,
+                      victim_policy="random")
+
+
+@pytest.mark.faults
+def test_cluster_crash_recovery_tokens_identical():
+    """An engine crash mid-decode: the survivors re-run the victim's
+    work and every request finishes with byte-identical tokens."""
+    def run(plan):
+        cfg = get_smoke_config("qwen2.5-3b")
+        inj = FaultInjector(plan) if plan is not None else None
+        cluster = ServingCluster(cfg, geometry=GEO, n_engines=2,
+                                 max_batch=2, max_seq=64, seed=0,
+                                 prefix_cache=False, migrate=False,
+                                 decode_window_us=1000.0,
+                                 fault_injector=inj)
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=i, tenant=0, priority=(2 if i == 2 else 0),
+                        prompt=rng.integers(0, cfg.vocab_size, 16)
+                        .astype(np.int32), max_new=6)
+                for i in range(4)]
+        for r in reqs[:3]:
+            cluster.submit(r, engine=0)       # overload replica 0
+        cluster.submit(reqs[3], engine=1)
+        cluster.run_until_drained(max_steps=500)
+        assert all(r.done for r in reqs)
+        cluster.check_invariants()
+        return cluster, {r.rid: tuple(r.out) for r in reqs}
+
+    _, base = run(None)
+    cluster, rec = run(FaultPlan(engine_crashes=((2, 0),)))
+    assert rec == base, "crash recovery changed model outputs"
+    rs = cluster.router.stats
+    assert rs.crashes == 1 and rs.recovered_requeued >= 1
+    assert not cluster.engines[0].alive
+    assert cluster.engines[1].alive
