@@ -17,6 +17,7 @@ Suites:
   cluster  shared host tier + deadline router + migration (§10)
   spill    disk spill tier + write-back back-pressure     (§11)
   faults   crash recovery + spill integrity + degrade     (§12)
+  fused-decode  fused gather-attend decode vs sync/async  (§13)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -153,6 +154,9 @@ def main(argv=None):
         "faults": lambda: (
             serving_bench.faults_crash_compare()
             + serving_bench.faults_spill_compare()),
+        "fused-decode": lambda: (
+            serving_bench.fused_decode_compare()
+            + serving_bench.fused_kernel_compare()),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

@@ -87,6 +87,22 @@ Spill tier (DESIGN.md §11):
   order of magnitude slower than the link, so one lane queues evictions
   (``disk_contention_cycles``) and a second lane relieves them.
 
+Fused gather-attend decode (DESIGN.md §13):
+
+* ``fused_decode_compare`` — sync vs async vs ``fault_mode="fused"`` on
+  the oversubscribed trace: the fused path never blocks on the DMA
+  engine before decode — arriving pages are consumed straight from the
+  staging buffer by the readiness-masked attention path and only the
+  transfer *tail* past the decode window is exposed.  Tokens are
+  byte-identical across all three modes, and at the starved 2 µs
+  window the fused path's exposed µs sit strictly below the async
+  pipeline's (which must stall for every page before launch).
+* ``fused_kernel_compare`` — the readiness-masked kernel against the
+  gather-then-attend baseline on one synthetic batch: with every page
+  resident the fused kernel's output is bitwise identical to the
+  baseline paged kernel, and with half the pages staged it matches the
+  scatter-then-attend result to float32 round-off.
+
 Fault tolerance (DESIGN.md §12):
 
 * ``faults_crash_compare`` — a seeded engine crash mid-decode vs the
@@ -1255,4 +1271,185 @@ def faults_spill_compare() -> List[Dict]:
     assert corrupt_identical, "spill corruption leaked into outputs!"
     assert outs["degrade"] == outs["clean"], \
         "degraded tier changed model outputs!"
+    return rows
+
+
+# ------------------------------------------- fused gather-attend decode
+
+
+def fused_decode_compare(factor: float = 2.0,
+                         n_requests: int = 8) -> List[Dict]:
+    """Sync vs async vs fused fault-in on the same oversubscribed trace.
+
+    The fused path (``fault_mode="fused"``) removes the step-granularity
+    DMA barrier: instead of waiting for every missing page before the
+    decode launches, it hands the attention kernel a per-page readiness
+    mask plus staging-buffer slots and lets the kernel consume arriving
+    pages in place.  Only the transfer tail past the decode window is
+    exposed, so at the starved 2 µs window its exposed µs must sit
+    strictly below the async pipeline's (which stalls per page before
+    launch).  Tokens stay byte-identical across all three modes — the
+    staged bytes are exactly what the scatter would have written.
+
+    The hidden-fraction claim is calibrated at the default 8-request
+    trace: bigger traces shift exposure into single resume transfers
+    many times the window (a 20 µs DMA exposes ≥18 µs under *any*
+    2 µs-window scheme), so async and fused converge toward the same
+    floor and the fraction measures trace shape, not the mechanism.
+    The strictly-below-async claim holds at every size.
+    """
+    configs = (("sync", "sync", None),
+               ("async", "async", 1000.0),
+               ("async-tight", "async", 2.0),
+               ("fused", "fused", 1000.0),
+               ("fused-tight", "fused", 2.0))
+    rows = []
+    outs, stats = {}, {}
+    for mode, fault_mode, window in configs:
+        eng, reqs = run_oversubscribed(
+            "mosaic", factor=factor, n_requests=n_requests,
+            fault_mode=fault_mode, decode_window_us=window)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        stats[mode] = eng.stats
+        s = eng.stats
+        rows.append({
+            "bench": "fused-decode", "mode": mode, "factor": factor,
+            "tok_per_s_cpu": round(s.tok_per_s(), 1),
+            "faults": s.faults, "dma_count": s.fault_dmas,
+            "transfer_us": round(s.transfer_us, 1),
+            "exposed_us": round(s.fault_exposed_us, 1),
+            "hidden_us": round(s.fault_hidden_us, 1),
+            "fused_ready_pages": s.fused_ready_pages,
+            "fused_drained_pages": s.fused_drained_pages,
+            "fused_tail_us": round(s.fused_tail_us, 1),
+        })
+    identical = all(o == outs["sync"] for o in outs.values())
+    assert identical, "fused fault-in changed tokens!"
+    sync_exp = max(stats["sync"].fault_exposed_us, 1e-9)
+    frac_tight = 1.0 - stats["fused-tight"].fault_exposed_us / sync_exp
+    below_async = (stats["fused-tight"].fault_exposed_us
+                   < stats["async-tight"].fault_exposed_us)
+    drained = (stats["fused"].fused_drained_pages
+               + stats["fused-tight"].fused_drained_pages)
+    rows.append({"bench": "fused-decode", "mode": "CHECK", "factor": factor,
+                 "hidden_fraction_fused_tight": round(frac_tight, 3),
+                 "fused_tight_exposed_us":
+                     round(stats["fused-tight"].fault_exposed_us, 1),
+                 "async_tight_exposed_us":
+                     round(stats["async-tight"].fault_exposed_us, 1),
+                 "outputs_identical": identical})
+    rows.append({"bench": "fused-decode", "mode": "CLAIM", "factor": factor,
+                 "claim_fused_tokens_identical": bool(identical),
+                 "claim_fused_tight_exposed_below_async": bool(below_async),
+                 "claim_fused_hides_over_089": bool(frac_tight > 0.89),
+                 "claim_fused_drains_in_kernel": bool(drained > 0),
+                 "hidden_fraction_fused_tight": round(frac_tight, 3)})
+    assert below_async, (
+        f"fused tight exposed {stats['fused-tight'].fault_exposed_us:.1f}us "
+        f"not below async {stats['async-tight'].fault_exposed_us:.1f}us")
+    return rows
+
+
+def fused_kernel_compare(B: int = 4, nblk: int = 8, reps: int = 3) -> List[Dict]:
+    """Readiness-masked kernel vs gather-then-attend on one synthetic batch.
+
+    All-resident (every slot -1) the fused kernel must be *bitwise*
+    identical to the baseline page-granularity kernel — the masked loads
+    all select the pool and the late accumulator never initializes, so
+    the flush emits the ready scratch untouched.  With half the pages
+    staged it must match scatter-then-attend to float32 round-off (the
+    two-accumulator combine is a fixed-order reassociation, and pallas
+    interpret mode jits the kernel while the scatter path runs the same
+    ops under a separate trace).  Tokens/s rows are CPU wall-clock on
+    the interpret-mode kernel — relative only.
+    """
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import (fused_paged_attention_kernel,
+                                               paged_attention_kernel)
+
+    n_kv, g, dh, ptok = 2, 2, 16, 8
+    NP = B * nblk + 4
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, n_kv * g, dh), np.float32))
+    pool_k = jnp.asarray(rng.standard_normal((NP, ptok, n_kv, dh), np.float32))
+    pool_v = jnp.asarray(rng.standard_normal((NP, ptok, n_kv, dh), np.float32))
+    tables = jnp.asarray(
+        rng.permutation(NP)[:B * nblk].reshape(B, nblk).astype(np.int32))
+    ntok = jnp.full((B, nblk), ptok, jnp.int32)
+    scale = 1.0 / float(np.sqrt(dh))
+
+    base = paged_attention_kernel(q, pool_k, pool_v, tables, ntok,
+                                  granularity="page", scale=scale)
+
+    # All resident: every slot -1, stage pools untouched.
+    no_slots = jnp.full((B, nblk), -1, jnp.int32)
+    stage_k = pool_k[:4]
+    stage_v = pool_v[:4]
+    allready = fused_paged_attention_kernel(
+        q, pool_k, pool_v, stage_k, stage_v, tables, no_slots, ntok,
+        scale=scale)
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(allready, base))
+
+    # Half the pages staged: their pool bytes are garbage, the staging
+    # buffer holds the truth.  Gather-then-attend scatters first.
+    late = np.zeros((B, nblk), bool)
+    late[:, 1::2] = True
+    NS = int(late.sum())
+    slots_np = np.full((B, nblk), -1, np.int32)
+    slots_np[late] = np.arange(NS, dtype=np.int32)
+    tbl_np = np.asarray(tables)
+    sk = np.asarray(pool_k)[tbl_np[late]]
+    sv = np.asarray(pool_v)[tbl_np[late]]
+    dirty_k = np.asarray(pool_k).copy()
+    dirty_v = np.asarray(pool_v).copy()
+    dirty_k[tbl_np[late]] = rng.standard_normal(sk.shape).astype(np.float32)
+    dirty_v[tbl_np[late]] = rng.standard_normal(sv.shape).astype(np.float32)
+    slots = jnp.asarray(slots_np)
+    fused = fused_paged_attention_kernel(
+        q, jnp.asarray(dirty_k), jnp.asarray(dirty_v),
+        jnp.asarray(sk), jnp.asarray(sv), tables, slots, ntok, scale=scale)
+    partial_ok = all(
+        np.allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+        for a, b in zip(fused, base))
+
+    def _time(fn):
+        fn()                        # warm the jit/trace caches
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = fn()
+            [np.asarray(x) for x in r]
+        return (time.perf_counter() - t0) / reps
+
+    def _gather_then_attend():
+        gk = np.asarray(dirty_k).copy()
+        gv = np.asarray(dirty_v).copy()
+        gk[tbl_np[late]] = sk
+        gv[tbl_np[late]] = sv
+        return paged_attention_kernel(q, jnp.asarray(gk), jnp.asarray(gv),
+                                      tables, ntok,
+                                      granularity="page", scale=scale)
+
+    t_fused = _time(lambda: fused_paged_attention_kernel(
+        q, jnp.asarray(dirty_k), jnp.asarray(dirty_v),
+        jnp.asarray(sk), jnp.asarray(sv), tables, slots, ntok, scale=scale))
+    t_gather = _time(_gather_then_attend)
+    toks = B * nblk * ptok
+    rows = [
+        {"bench": "fused-kernel", "mode": "fused", "batch": B,
+         "blocks": nblk, "staged_pages": NS,
+         "tok_per_s_cpu": round(toks / max(t_fused, 1e-9), 1)},
+        {"bench": "fused-kernel", "mode": "gather-then-attend", "batch": B,
+         "blocks": nblk, "staged_pages": NS,
+         "tok_per_s_cpu": round(toks / max(t_gather, 1e-9), 1)},
+        {"bench": "fused-kernel", "mode": "CLAIM",
+         "claim_fused_allready_bitwise": bool(bitwise),
+         "claim_fused_partial_matches_gather": bool(partial_ok)},
+    ]
+    assert bitwise, "all-resident fused kernel is not bitwise identical"
+    assert partial_ok, "partially-staged fused kernel diverged from gather"
     return rows

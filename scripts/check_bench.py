@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Bench-regression gate (CI `bench-smoke` job; runnable locally):
+
+Diffs a freshly-generated ``BENCH_serving.json`` against the committed
+baseline and fails if any claim that was **true** at the baseline has
+flipped to anything other than true.  Only booleans gate — float
+datapoints (``hidden_fraction*``) ride in the claims dict for trajectory
+tracking and are reported, never gated.  A baseline claim missing from
+the fresh artifact is a warning, not a failure: partial ``--only`` runs
+only refresh the suites they executed, and a renamed claim should fail
+review, not CI.
+
+    python scripts/check_bench.py \\
+        --baseline /tmp/bench_baseline.json --fresh BENCH_serving.json
+
+Without ``--baseline`` the committed copy is read via
+``git show HEAD:BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load_baseline(path: str | None) -> dict:
+    if path:
+        with open(path) as f:
+            return json.load(f)
+    out = subprocess.run(
+        ["git", "show", "HEAD:BENCH_serving.json"],
+        cwd=ROOT, capture_output=True, text=True)
+    if out.returncode != 0:
+        print("no committed BENCH_serving.json baseline; nothing to gate")
+        return {}
+    return json.loads(out.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="baseline artifact (default: git show HEAD:...)")
+    ap.add_argument("--fresh", default="BENCH_serving.json",
+                    help="freshly generated artifact")
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline).get("claims", {})
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f).get("claims", {})
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read fresh artifact {args.fresh}: {e}")
+        return 1
+
+    regressions, missing, floats = [], [], []
+    for name, val in sorted(baseline.items()):
+        if val is not True:
+            # Floats (hidden_fraction*) and claims that were already
+            # false at the baseline never gate; only green can regress.
+            if isinstance(val, float):
+                floats.append(name)
+            continue
+        if name not in fresh:
+            missing.append(name)
+        elif fresh[name] is not True:
+            regressions.append((name, fresh[name]))
+
+    for name in floats:
+        cur = fresh.get(name, "absent")
+        print(f"  info  {name}: baseline={baseline[name]} fresh={cur}")
+    for name in missing:
+        print(f"  warn  {name}: true at baseline, absent from fresh "
+              f"artifact (suite not rerun?)")
+    for name, val in regressions:
+        print(f"  FAIL  {name}: true at baseline, now {val!r}")
+
+    gated = sum(1 for v in baseline.values() if v is True)
+    print(f"checked {gated} baseline claims: "
+          f"{len(regressions)} regressed, {len(missing)} missing")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

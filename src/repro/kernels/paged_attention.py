@@ -189,3 +189,183 @@ def combine_granularities(parts):
     l_g = sum(l * jnp.exp(m - m_g) for m, l in zip(ms, ls))
     o_g = sum(o * jnp.exp(m - m_g)[..., None] for m, o in zip(ms, os))
     return o_g, m_g, l_g
+
+
+# -------------------------------------------------------- fused gather-attend
+
+
+def _fused_kernel(tables_ref, ntok_ref, slots_ref, meta_ref,
+                  q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref,
+                  m_r, l_r, o_r, m_t, l_t, o_t, *,
+                  tokens_per_block: int, scale: float):
+    """Fused gather-attend body (DESIGN.md §13).
+
+    Each grid step reads one page from EITHER the resident pool (slot ==
+    -1, via the page table) OR the staging region (slot >= 0, via the
+    slot table) — arriving pages are consumed where the DMA landed them,
+    no second copy.  Two flash accumulators run in canonical block
+    order: the *ready* set (pool-resident pages) and the *late* set
+    (staging-slot pages); the flush combines them in fixed (ready, late)
+    order.  With every page ready this executes exactly the baseline
+    ``_paged_kernel`` accumulate sequence — bitwise-equal fast path —
+    and once all pages have landed the staged bytes equal what a
+    gather-then-scatter would have written, so the fused result matches
+    gather-then-attend.
+
+    ``meta_ref[b] = (n_late, first_ready, first_late)`` (first_* = -1
+    when that set is empty) tells each row which block initializes which
+    accumulator and which flush case applies.
+    """
+    b = pl.program_id(0)
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+    late = slots_ref[b, blk] >= 0
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = jnp.where(late, ks_ref[0].astype(jnp.float32),
+                  kp_ref[0].astype(jnp.float32))
+    v = jnp.where(late, vs_ref[0].astype(jnp.float32),
+                  vp_ref[0].astype(jnp.float32))
+    nt = ntok_ref[b, blk]
+    valid = jax.lax.broadcasted_iota(
+        jnp.int32, (tokens_per_block,), 0) < nt
+    n_late = meta_ref[b, 0]
+    first_ready = meta_ref[b, 1]
+    first_late = meta_ref[b, 2]
+    ready = jnp.logical_not(late)
+
+    @pl.when(ready & (blk == first_ready))
+    def _init_ready():
+        _flash_step(q, k, v, valid, m_r, l_r, o_r, first=True)
+
+    @pl.when(ready & (blk != first_ready))
+    def _acc_ready():
+        _flash_step(q, k, v, valid, m_r, l_r, o_r, first=False)
+
+    @pl.when(late & (blk == first_late))
+    def _init_late():
+        _flash_step(q, k, v, valid, m_t, l_t, o_t, first=True)
+
+    @pl.when(late & (blk != first_late))
+    def _acc_late():
+        _flash_step(q, k, v, valid, m_t, l_t, o_t, first=False)
+
+    last = blk == nblk - 1
+
+    @pl.when(last & (n_late == 0))
+    def _flush_all_ready():
+        # Late scratch was never written: emit the ready accumulator
+        # untouched — bit-for-bit the baseline kernel's flush.
+        o_ref[0] = o_r[...]
+        m_ref[0] = m_r[...]
+        l_ref[0] = l_r[...]
+
+    @pl.when(last & (n_late == nblk))
+    def _flush_all_late():
+        o_ref[0] = o_t[...]
+        m_ref[0] = m_t[...]
+        l_ref[0] = l_t[...]
+
+    @pl.when(last & (n_late > 0) & (n_late < nblk))
+    def _flush_combined():
+        m_g = jnp.maximum(m_r[...], m_t[...])
+        a_r = jnp.exp(m_r[...] - m_g)
+        a_t = jnp.exp(m_t[...] - m_g)
+        o_ref[0] = o_r[...] * a_r[..., None] + o_t[...] * a_t[..., None]
+        m_ref[0] = m_g
+        l_ref[0] = l_r[...] * a_r + l_t[...] * a_t
+
+
+def readiness_meta(slots):
+    """Per-row readiness summary for the fused kernel's scalar prefetch:
+    ``[B, 3]`` int32 of (n_late, first_ready, first_late), where first_*
+    is the lowest block index in that set or -1 when the set is empty."""
+    late = slots >= 0
+    ready = jnp.logical_not(late)
+    n_late = late.sum(axis=1).astype(jnp.int32)
+    first_late = jnp.where(late.any(axis=1),
+                           jnp.argmax(late, axis=1), -1).astype(jnp.int32)
+    first_ready = jnp.where(ready.any(axis=1),
+                            jnp.argmax(ready, axis=1), -1).astype(jnp.int32)
+    return jnp.stack([n_late, first_ready, first_late], axis=1)
+
+
+def fused_paged_attention_kernel(
+    q, pool_k, pool_v, stage_k, stage_v, tables, slots, ntok, *,
+    scale: float = 1.0,
+    interpret: bool = True,
+):
+    """Decode attention over partially-resident KV (DESIGN.md §13).
+
+    q [B, H, dh]; pool_k/v [NP, ptok, kv, dh{,_v}] the resident pool;
+    stage_k/v [NS, ptok, kv, dh{,_v}] the staging region late arrivals
+    landed in; tables [B, n_blocks] pool page ids (-1 holes);
+    slots [B, n_blocks] staging slot per page (-1 = read the pool —
+    the per-page readiness mask); ntok [B, n_blocks].
+    Returns unnormalized (o, m, l) like :func:`paged_attention_kernel`;
+    page granularity (staging slots are page-sized).
+    """
+    B, H, dh = q.shape
+    NP, ptok, n_kv, _ = pool_k.shape
+    dh_v = pool_v.shape[-1]
+    g = H // n_kv
+    nblocks = tables.shape[1]
+    if stage_k.shape[0] == 0:       # all-resident caller: keep specs legal
+        stage_k = jnp.zeros((1, ptok, n_kv, dh), pool_k.dtype)
+        stage_v = jnp.zeros((1, ptok, n_kv, dh_v), pool_v.dtype)
+    qg = q.reshape(B, n_kv, g, dh)
+    meta = readiness_meta(slots)
+
+    def q_index(b, blk, tables, ntok, slots, meta):
+        return (b, 0, 0, 0)
+
+    def kv_pool_index(b, blk, tables, ntok, slots, meta):
+        return (jnp.maximum(tables[b, blk], 0), 0, 0, 0)
+
+    def kv_stage_index(b, blk, tables, ntok, slots, meta):
+        return (jnp.maximum(slots[b, blk], 0), 0, 0, 0)
+
+    def out_index(b, blk, tables, ntok, slots, meta):
+        return (b, 0, 0)
+
+    def out_index4(b, blk, tables, ntok, slots, meta):
+        return (b, 0, 0, 0)
+
+    kernel = functools.partial(
+        _fused_kernel, tokens_per_block=ptok, scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(B, nblocks),
+            in_specs=[
+                pl.BlockSpec((1, n_kv, g, dh), q_index),
+                pl.BlockSpec((1, ptok, n_kv, dh), kv_pool_index),
+                pl.BlockSpec((1, ptok, n_kv, dh_v), kv_pool_index),
+                pl.BlockSpec((1, ptok, n_kv, dh), kv_stage_index),
+                pl.BlockSpec((1, ptok, n_kv, dh_v), kv_stage_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, n_kv, g, dh_v), out_index4),
+                pl.BlockSpec((1, n_kv, g), out_index),
+                pl.BlockSpec((1, n_kv, g), out_index),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g, dh_v), jnp.float32),
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g), jnp.float32),
+                pltpu.VMEM((n_kv, g, dh_v), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, g, dh_v), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, g), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, ntok, slots, meta, qg, pool_k, pool_v, stage_k, stage_v)
+    return (o.reshape(B, H, dh_v), m.reshape(B, H), l.reshape(B, H))

@@ -78,3 +78,77 @@ def page_compact_ref(pool, src, dst):
         [pool, jnp.zeros((1, *pool.shape[1:]), pool.dtype)], axis=0)
     out = padded.at[d].set(moved)
     return out[:-1]
+
+
+class _ScratchCell:
+    """Minimal stand-in for a pallas scratch ref: `cell[...]` reads the
+    held array, `cell[...] = x` replaces it.  Lets the reference reuse
+    the kernel module's `_flash_step` verbatim so the fused reference is
+    op-for-op (and therefore bitwise) identical to interpret mode."""
+
+    def __init__(self):
+        self.val = None
+
+    def __getitem__(self, _):
+        return self.val
+
+    def __setitem__(self, _, v):
+        self.val = v
+
+
+def fused_gather_attend_ref(q, pool_k, pool_v, stage_k, stage_v,
+                            tables, slots, ntok, *, scale):
+    """Oracle for the fused gather-attend kernel (DESIGN.md §13).
+
+    Mirrors `_fused_kernel` exactly: per batch row, walk blocks in
+    canonical order, folding pool-resident pages (slot == -1) into the
+    *ready* accumulator and staged pages (slot >= 0) into the *late*
+    accumulator via the same `_flash_step`, then combine the two in
+    fixed (ready, late) order.  Returns unnormalized (o, m, l).
+    """
+    from repro.kernels.paged_attention import _flash_step
+
+    B, H, dh = q.shape
+    _np, ptok, n_kv, _ = pool_k.shape
+    dh_v = pool_v.shape[-1]
+    g = H // n_kv
+    nblk = tables.shape[1]
+    os, ms, ls = [], [], []
+    for b in range(B):
+        qb = q[b].reshape(n_kv, g, dh).astype(jnp.float32) * scale
+        acc = {False: None, True: None}      # late? -> (m, l, o) cells
+        for blk in range(nblk):
+            late = bool(slots[b, blk] >= 0)
+            if late:
+                k = stage_k[max(int(slots[b, blk]), 0)]
+                v = stage_v[max(int(slots[b, blk]), 0)]
+            else:
+                k = pool_k[max(int(tables[b, blk]), 0)]
+                v = pool_v[max(int(tables[b, blk]), 0)]
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            nt = int(ntok[b, blk])
+            valid = jnp.arange(ptok, dtype=jnp.int32) < nt
+            first = acc[late] is None
+            if first:
+                acc[late] = (_ScratchCell(), _ScratchCell(), _ScratchCell())
+            m_s, l_s, o_s = acc[late]
+            _flash_step(qb, k, v, valid, m_s, l_s, o_s, first=first)
+        if acc[True] is None:                # all-ready fast path
+            m_s, l_s, o_s = acc[False]
+            o_b, m_b, l_b = o_s.val, m_s.val, l_s.val
+        elif acc[False] is None:             # nothing resident
+            m_s, l_s, o_s = acc[True]
+            o_b, m_b, l_b = o_s.val, m_s.val, l_s.val
+        else:                                # fixed-order combine
+            m_r, l_r, o_r = (c.val for c in acc[False])
+            m_t, l_t, o_t = (c.val for c in acc[True])
+            m_b = jnp.maximum(m_r, m_t)
+            a_r = jnp.exp(m_r - m_b)
+            a_t = jnp.exp(m_t - m_b)
+            o_b = o_r * a_r[..., None] + o_t * a_t[..., None]
+            l_b = l_r * a_r + l_t * a_t
+        os.append(o_b.reshape(H, dh_v))
+        ms.append(m_b.reshape(H))
+        ls.append(l_b.reshape(H))
+    return jnp.stack(os), jnp.stack(ms), jnp.stack(ls)

@@ -114,6 +114,7 @@ def write_prefill_kv(k_pool, v_pool, k_seq, v_seq, tables, *,
 def paged_attention_local(
     q, k_pool, v_pool, tables, ntok, *, scale: Optional[float] = None,
     page_block: int = 8,
+    stage_k=None, stage_v=None, slots=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Partial paged attention over this shard's pages (pure-JNP oracle).
 
@@ -121,6 +122,16 @@ def paged_attention_local(
     tables: [B, mpps] local page ids; ntok: [B, mpps] valid tokens/page
     Returns unnormalized (o [B,H,dh], m [B,H], l [B,H]) fp32 partials to be
     flash-combined across page shards.
+
+    ``stage_k``/``stage_v`` [NS, ptok, n_kv, dh{,_v}] + ``slots``
+    [B, mpps] implement fused gather-attend over partially-resident KV
+    (DESIGN.md §13): a page whose slot is >= 0 is read from the staging
+    region at that slot instead of the pool — the readiness mask.  The
+    accumulation order is unchanged (each block still folds in at its
+    canonical position, only the load source differs), so when the
+    staged bytes equal what a scatter would have written the result is
+    bitwise-identical to the slot-free call.  ``slots=None`` keeps the
+    classic all-resident path byte-for-byte.
     """
     B, H, dh = q.shape
     npages_pool, ptok, n_kv, _ = k_pool.shape
@@ -134,6 +145,8 @@ def paged_attention_local(
     if pad:
         tables = jnp.pad(tables, ((0, 0), (0, pad)), constant_values=-1)
         ntok = jnp.pad(ntok, ((0, 0), (0, pad)))
+        if slots is not None:
+            slots = jnp.pad(slots, ((0, 0), (0, pad)), constant_values=-1)
         mpps += pad
     nblk = mpps // pb
 
@@ -144,6 +157,12 @@ def paged_attention_local(
         safe = jnp.maximum(tb, 0)
         k = k_pool[safe]                                  # [B, pb, ptok, n_kv, dh]
         v = v_pool[safe]
+        if slots is not None:
+            sl = jax.lax.dynamic_slice_in_dim(slots, blk * pb, pb, axis=1)
+            sel = (sl >= 0)[..., None, None, None]
+            ssafe = jnp.maximum(sl, 0)
+            k = jnp.where(sel, stage_k[ssafe], k)
+            v = jnp.where(sel, stage_v[ssafe], v)
         k = k.reshape(B, pb * ptok, n_kv, dh).astype(jnp.float32)
         v = v.reshape(B, pb * ptok, n_kv, dh_v).astype(jnp.float32)
         # Grouped GQA scores without materializing repeated K/V.

@@ -59,6 +59,15 @@ class PageCtx:
     ntok: jax.Array
     wpage: jax.Array
     wslot: jax.Array
+    # Fused gather-attend decode over partially-resident KV (DESIGN.md
+    # §13): per-page staging slot mirroring `tables` (-1 = pool-resident,
+    # >= 0 = read the page from the staging region) plus the step-local
+    # staging pools [L, NS, ptok, n_kv, dh{,_v}].  None = the classic
+    # all-resident path (sync/async fault modes, and fused steps with
+    # nothing in flight).
+    slots: Optional[jax.Array] = None
+    stage_k: Optional[jax.Array] = None
+    stage_v: Optional[jax.Array] = None
     batch_sharded: bool = True
     frame_pages: int = 16       # frame striping granularity (prefill scatter)
 
@@ -90,7 +99,8 @@ class PageCtx:
 
 jax.tree_util.register_dataclass(
     PageCtx,
-    data_fields=["tables", "ntok", "wpage", "wslot"],
+    data_fields=["tables", "ntok", "wpage", "wslot",
+                 "slots", "stage_k", "stage_v"],
     meta_fields=["batch_sharded", "frame_pages"],
 )
 
@@ -291,22 +301,32 @@ def paged_attn_op(q, k_new, v_new, k_pool, v_pool, ctx: PageCtx, *, scale):
     mesh = _ambient_mesh()
 
     def local(q, k_new, v_new, k_pool, v_pool, tables, ntok, wpage, wslot,
-              axes=()):
+              axes=(), stage_k=None, stage_v=None, slots=None):
         tables = tables.reshape(tables.shape[0], -1)
         ntok = ntok.reshape(ntok.shape[0], -1)
+        if slots is not None:
+            slots = slots.reshape(slots.shape[0], -1)
         # One shard column holds the write page; the rest are -1 (also the
         # unsharded test path, where all S columns arrive at once).
         wpage = wpage.reshape(wpage.shape[0], -1).max(axis=1)
         k_pool, v_pool = paged.write_kv(k_pool, v_pool, k_new, v_new,
                                         wpage, wslot)
         o, m, l = paged.paged_attention_local(
-            q, k_pool, v_pool, tables, ntok, scale=scale)
+            q, k_pool, v_pool, tables, ntok, scale=scale,
+            stage_k=stage_k, stage_v=stage_v, slots=slots)
         o = paged.combine_partials(o, m, l, axes)
         return o.astype(q.dtype), k_pool, v_pool
 
     if mesh is None:
         return local(q, k_new, v_new, k_pool, v_pool,
-                     ctx.tables, ctx.ntok, ctx.wpage, ctx.wslot)
+                     ctx.tables, ctx.ntok, ctx.wpage, ctx.wslot,
+                     stage_k=ctx.stage_k, stage_v=ctx.stage_v,
+                     slots=ctx.slots)
+    if ctx.slots is not None:
+        # Staging consumption is an engine-local (mesh-free) decode path;
+        # the sharded path would need staging sub-pools per page shard.
+        raise NotImplementedError(
+            "fused staging decode (PageCtx.slots) has no mesh path")
 
     axes = ctx.page_axes(mesh)
     bs = ctx.batch_spec(mesh)
@@ -555,13 +575,17 @@ def decoder_stack_decode(cfg: ModelConfig, params, x, pos, pools, ctx):
         x, kps, vps = carry
         l, lp = inp
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        # Staging pools arrive layer-stacked [L, NS, ...] (DESIGN.md §13);
+        # each layer's attention drains its own slice.
+        lctx = ctx if ctx.stage_k is None else dataclasses.replace(
+            ctx, stage_k=ctx.stage_k[l], stage_v=ctx.stage_v[l])
         if cfg.mla is not None:
             from repro.models.mla import mla_block_decode
             a, kp, vp = mla_block_decode(cfg, lp["attn"], h, pos,
-                                         kps[l], vps[l], ctx)
+                                         kps[l], vps[l], lctx)
         else:
             a, kp, vp = attn_block_decode(cfg, lp["attn"], h, pos,
-                                          kps[l], vps[l], ctx)
+                                          kps[l], vps[l], lctx)
         x = x + a
         h = rms_norm(x, lp["ln2"], cfg.norm_eps)
         f = moe_block(cfg, lp["moe"], h)[0] if cfg.moe is not None else \

@@ -48,6 +48,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig, PoolGeometry
 from repro.core.demand_paging import LinkModel
 from repro.serving.dma import AsyncDMAEngine
@@ -91,11 +93,16 @@ class HostFrameTable:
     """
 
     def __init__(self, frame_pages: int,
-                 capacity_frames: Optional[int] = None) -> None:
+                 capacity_frames: Optional[int] = None,
+                 victim_scoring: str = "lru") -> None:
         assert frame_pages >= 1
         assert capacity_frames is None or capacity_frames >= 1
+        if victim_scoring not in ("lru", "cost"):
+            raise ValueError(f"victim_scoring must be 'lru' or 'cost', "
+                             f"got {victim_scoring!r}")
         self.frame_pages = frame_pages
         self.capacity_frames = capacity_frames
+        self.victim_scoring = victim_scoring
         self._key_frame: Dict[Key, int] = {}
         self._frame_keys: Dict[int, Set[Key]] = {}
         self._frame_owner: Dict[int, Domain] = {}
@@ -105,6 +112,7 @@ class HostFrameTable:
         self._state: Dict[int, str] = {}          # leased frame → FRAME_*
         self._frame_tick: Dict[int, int] = {}     # LRU clock per frame
         self._tick = 0
+        self._frame_hits: Dict[int, int] = {}     # touches since lease
         self.stats = {
             "frames_leased": 0, "frames_recycled": 0, "peak_frames": 0,
             "placed_pages": 0, "page_moves": 0, "whole_frame_moves": 0,
@@ -138,14 +146,27 @@ class HostFrameTable:
 
     def spill_victim(self, exclude: Set[int] = frozenset(),
                      owner_ok=None) -> Optional[int]:
-        """Least-recently-touched ``FRAME_HOST`` frame outside ``exclude``
+        """Pick the ``FRAME_HOST`` frame to spill, outside ``exclude``
         (``owner_ok``: optional domain predicate — the hard-capped tier
-        restricts victims to prefix-cache domains)."""
+        restricts victims to prefix-cache domains).
+
+        ``victim_scoring="lru"`` (baseline): least-recently-touched.
+        ``victim_scoring="cost"`` (ROADMAP spill follow-on): minimize
+        hit-frequency × promote cost — a rarely-touched frame that is
+        also cheap to bring back (few occupied pages ⇒ a short disk
+        read on promote) carries the least expected future stall.  The
+        LRU tick breaks score ties so the policies agree on cold sets.
+        """
         cands = [f for f, s in self._state.items()
                  if s == FRAME_HOST and f not in exclude
                  and (owner_ok is None or owner_ok(self._frame_owner[f]))]
         if not cands:
             return None
+        if self.victim_scoring == "cost":
+            return min(cands, key=lambda f: (
+                self._frame_hits.get(f, 0)
+                * (1 + len(self._frame_keys.get(f, ()))),
+                self._frame_tick.get(f, 0), f))
         return min(cands, key=lambda f: (self._frame_tick.get(f, 0), f))
 
     # ------------------------------------------------------------- mutate
@@ -153,6 +174,7 @@ class HostFrameTable:
     def _touch_frame(self, f: int) -> None:
         self._tick += 1
         self._frame_tick[f] = self._tick
+        self._frame_hits[f] = self._frame_hits.get(f, 0) + 1
 
     def touch(self, key: Key) -> Optional[str]:
         """Refresh the LRU tick of ``key``'s frame; returns its state."""
@@ -172,6 +194,7 @@ class HostFrameTable:
         self._frame_keys[f] = set()
         self._open.setdefault(domain, set()).add(f)
         self._state[f] = FRAME_HOST
+        self._frame_hits[f] = 0       # recycled ids must not inherit heat
         self._touch_frame(f)
         self.stats["frames_leased"] += 1
         self.stats["peak_frames"] = max(self.stats["peak_frames"],
@@ -211,6 +234,7 @@ class HostFrameTable:
             del self._frame_keys[f]
             del self._frame_owner[f]
             self._frame_tick.pop(f, None)
+            self._frame_hits.pop(f, None)
             self._open.get(domain, set()).discard(f)
             self._free.append(f)
             self.stats["frames_recycled"] += 1
@@ -515,13 +539,17 @@ class SharedHostTier:
                  injector: Optional[FaultInjector] = None,
                  disk_retries: int = 3,
                  retry_backoff_us: float = 50.0,
-                 disk_error_rate_threshold: float = 0.5) -> None:
+                 disk_error_rate_threshold: float = 0.5,
+                 victim_scoring: str = "lru",
+                 undegrade_probe_interval_us: Optional[float] = 10_000.0,
+                 undegrade_probe_successes: int = 3) -> None:
         assert wb_queue_frames >= 1
         self.geo = geometry
         self.n_engines = n_engines
         self.store = HostPageStore()
         self.frames = HostFrameTable(geometry.frame_pages,
-                                     capacity_frames=capacity_frames)
+                                     capacity_frames=capacity_frames,
+                                     victim_scoring=victim_scoring)
         self.capacity_frames = capacity_frames
         self.spill_enabled = spill and capacity_frames is not None
         self.wb_queue_frames = wb_queue_frames
@@ -533,6 +561,16 @@ class SharedHostTier:
         self.retry_backoff_us = retry_backoff_us
         self.disk_error_rate_threshold = disk_error_rate_threshold
         self.degraded = False
+        # Un-degrade re-probing (ROADMAP fault-tolerance follow-on): a
+        # degraded tier probes the disk every interval with a tiny
+        # write/read/delete round-trip; after ``undegrade_probe_successes``
+        # consecutive clean probes it re-enables the spill path.  None
+        # disables probing (degrade stays terminal, the pre-PR-7
+        # behavior).  Probes never feed the _note_disk error-rate window.
+        self.undegrade_probe_interval_us = undegrade_probe_interval_us
+        self.undegrade_probe_successes = undegrade_probe_successes
+        self._last_probe_us = 0.0
+        self._probe_streak = 0
         self.lost_seqs: Set[int] = set()
         self._disk_ops = 0
         self._disk_errors = 0
@@ -563,6 +601,8 @@ class SharedHostTier:
             "frames_quarantined": 0, "quarantined_pages": 0,
             "quarantine_collateral_frames": 0,
             "lost_seq_count": 0, "reclaimed_frames": 0, "degraded": 0,
+            "degrades": 0, "undegrades": 0,
+            "probes": 0, "probe_failures": 0,
         }
         self.share_prefix = share_prefix
         if share_prefix:
@@ -675,6 +715,19 @@ class SharedHostTier:
         if self.capacity_frames is None:
             return
         self._now_us = max(self._now_us, float(now_us))
+        if (self.degraded and self.spill_store is not None
+                and self.undegrade_probe_interval_us is not None
+                and self._now_us - self._last_probe_us
+                >= self.undegrade_probe_interval_us):
+            self._last_probe_us = self._now_us
+            self.stats["probes"] += 1
+            if self._probe_disk():
+                self._probe_streak += 1
+                if self._probe_streak >= self.undegrade_probe_successes:
+                    self._undegrade()
+            else:
+                self._probe_streak = 0
+                self.stats["probe_failures"] += 1
         if not self.spill_enabled:
             return
         self.wb_dma.drain(self._now_us)
@@ -772,8 +825,55 @@ class SharedHostTier:
         self.degraded = True
         self.spill_enabled = False
         self.stats["degraded"] = 1
+        self.stats["degrades"] += 1
+        self._probe_streak = 0
+        self._last_probe_us = self._now_us
         for f in list(self._pending_wb):
             self._cancel_writeback(f)
+
+    # Probes use a reserved frame id no real lease can hold (HostFrameTable
+    # ids count up from 0), so injector budgets and the spill directory
+    # never collide with live frames.
+    _PROBE_FRAME = -1
+    _PROBE_DOMAIN = "__probe__"
+
+    def _probe_disk(self) -> bool:
+        """One health probe against the degraded disk: write a tiny
+        frame, read it back checksum-verified, delete it.  Failures are
+        counted per probe, never fed into the ``_note_disk`` error-rate
+        window (a probe must not re-trigger the degrade it is trying to
+        lift)."""
+        z = np.zeros((1,), np.float32)
+        try:
+            self.spill_store.write_frame(
+                self._PROBE_FRAME, self._PROBE_DOMAIN,
+                [((-1, -1, -1), (z, z))])
+        except (SpillIOError, SpillCorruptionError):
+            return False
+        try:
+            self.spill_store.read_frame(self._PROBE_FRAME,
+                                        expect_domain=self._PROBE_DOMAIN)
+            return True
+        except (SpillIOError, SpillCorruptionError):
+            return False
+        finally:
+            self.spill_store.delete_frame(self._PROBE_FRAME)
+
+    def _undegrade(self) -> None:
+        """Exit hard-cap mode (ROADMAP fault-tolerance follow-on): the
+        disk answered ``undegrade_probe_successes`` consecutive probes,
+        so new write-backs may trust it again.  The error-rate window
+        restarts from zero — a still-flaky disk will re-degrade on its
+        own evidence, not on stale counts."""
+        if not self.degraded:
+            return
+        self.degraded = False
+        self.spill_enabled = self.spill_store is not None
+        self._disk_ops = 0
+        self._disk_errors = 0
+        self._probe_streak = 0
+        self.stats["degraded"] = 0
+        self.stats["undegrades"] += 1
 
     # --------------------------------------------------------- spill policy
 
@@ -1127,6 +1227,9 @@ class ServingCluster:
                  disk_retries: int = 3,
                  retry_backoff_us: float = 50.0,
                  disk_error_rate_threshold: float = 0.5,
+                 victim_scoring: str = "lru",
+                 undegrade_probe_interval_us: Optional[float] = 10_000.0,
+                 undegrade_probe_successes: int = 3,
                  **engine_kw) -> None:
         assert n_engines >= 1
         self.cfg = cfg
@@ -1145,7 +1248,10 @@ class ServingCluster:
                 disk_seek_us=disk_seek_us,
                 injector=fault_injector, disk_retries=disk_retries,
                 retry_backoff_us=retry_backoff_us,
-                disk_error_rate_threshold=disk_error_rate_threshold)
+                disk_error_rate_threshold=disk_error_rate_threshold,
+                victim_scoring=victim_scoring,
+                undegrade_probe_interval_us=undegrade_probe_interval_us,
+                undegrade_probe_successes=undegrade_probe_successes)
         self.engines: List[ServingEngine] = []
         params = None
         for i in range(n_engines):

@@ -101,6 +101,19 @@ class DMAJob:
     def nbytes(self) -> int:
         return self.batch.nbytes
 
+    def page_done_us(self, i: int) -> float:
+        """Modeled completion timestamp of this job's ``i``-th page.
+
+        Pages land in key order along the merged transfer, so page ``i``
+        becomes readable at ``start + transfer · (i+1)/n`` — the
+        per-page readiness timeline the fused decode path consumes:
+        pages whose timestamp falls inside the decode window are drained
+        in-kernel for free, only the tail past ``done_us`` is exposed
+        (DESIGN.md §13).
+        """
+        n = max(len(self.keys), 1)
+        return self.start_us + self.transfer_us * (i + 1) / n
+
 
 class AsyncDMAEngine:
     """N-channel host⇄device DMA timeline with hidden/exposed accounting.
@@ -252,11 +265,20 @@ class StagingBuffer:
     payload was already transferred; the host copy stays authoritative
     until consumption), and invalidation simply drops entries — safe
     because staged payloads are copies.
+
+    Every staged key also gets a monotonically increasing ``slot_of``
+    id: the stable address of that page inside the staging region.  The
+    fused decode path (DESIGN.md §13) re-bases the slots it consumes
+    into a dense step-local stage pool addressable by the kernel's page
+    table, so attention reads late arrivals straight from staging with
+    no second copy.
     """
 
     def __init__(self) -> None:
         self._front: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
         self._back: Dict[Key, Tuple[np.ndarray, np.ndarray]] = {}
+        self._slots: Dict[Key, int] = {}
+        self._next_slot = 0
         self.stats = {"staged": 0, "consumed": 0, "invalidated": 0,
                       "peak_front": 0}
 
@@ -266,7 +288,14 @@ class StagingBuffer:
     def stage(self, key: Key,
               payload: Tuple[np.ndarray, np.ndarray]) -> None:
         self._back[key] = payload
+        if key not in self._slots:
+            self._slots[key] = self._next_slot
+            self._next_slot += 1
         self.stats["staged"] += 1
+
+    def slot_of(self, key: Key) -> Optional[int]:
+        """Staging-region slot of a currently staged key (None if absent)."""
+        return self._slots.get(key) if self.contains(key) else None
 
     def swap(self) -> None:
         self._front.update(self._back)
@@ -285,6 +314,8 @@ class StagingBuffer:
                 ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         payload = self._front.pop(key, None)
         if payload is not None:
+            if key not in self._back:
+                self._slots.pop(key, None)
             self.stats["consumed"] += 1
         return payload
 
@@ -294,6 +325,7 @@ class StagingBuffer:
         for buf in (self._front, self._back):
             for k in [k for k in buf if k[0] == seq]:
                 del buf[k]
+                self._slots.pop(k, None)
                 n += 1
         self.stats["invalidated"] += n
         return n

@@ -33,6 +33,20 @@ blocking path; both modes produce byte-identical tokens because the
 prefetch machinery never alters allocation or scheduling, only when
 transfers are modeled to happen.
 
+Fused gather-attend decode (DESIGN.md §13): ``fault_mode="fused"`` goes
+one step further and removes the pre-decode DMA barrier entirely.  The
+step pipeline becomes admit → start-decode-on-resident →
+drain-within-kernel: fault-in resolves this step's misses to *sources*
+(staged payloads, in-flight prefetch jobs, fresh demand jobs) without a
+single ``dma.wait``, decode launches immediately with a per-page
+readiness mask (``PageCtx.slots``) that lets attention read late
+arrivals straight from the staging pools, and the collected jobs settle
+against the *end* of the decode window — only transfer tails that
+outlive the window are exposed.  Tokens stay byte-identical to
+sync/async because the accumulation order never changes; only each
+page's load source (pool vs. staging) differs, and the staged bytes
+equal what the scatter would have written.
+
 Prefix-cache reuse (DESIGN.md §8): finished prompts park their full
 pages' KV in the :class:`~repro.serving.host_tier.PrefixIndex`, keyed by
 chained per-page content hash.  An admission whose prompt shares a
@@ -83,7 +97,8 @@ from repro.core.cocoa import OutOfMemory
 from repro.core.demand_paging import LinkModel
 from repro.kernels import ops as kops
 from repro.models.lm import LM
-from repro.serving.dma import AsyncDMAEngine, Prefetcher, StagingBuffer
+from repro.serving.dma import (AsyncDMAEngine, DMAJob, Prefetcher,
+                               StagingBuffer)
 from repro.serving.host_tier import HostPageStore, PrefixIndex
 from repro.serving.kv_cache import ShardedKVCache
 
@@ -171,6 +186,14 @@ class EngineStats:
     # ``clock_us <= deadline_us`` on the engine's modeled clock.
     deadline_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
     deadline_misses: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Fused gather-attend decode (DESIGN.md §13): pages the kernel
+    # consumed straight from staging — already landed when the step's
+    # decode window opened (*ready*) vs. arriving inside the window
+    # (*drained* in-kernel) — and the µs the engine stalled on transfer
+    # tails that outlived their window.
+    fused_ready_pages: int = 0
+    fused_drained_pages: int = 0
+    fused_tail_us: float = 0.0
 
     def note_deadline(self, priority: int, hit: bool) -> None:
         d = self.deadline_hits if hit else self.deadline_misses
@@ -253,6 +276,10 @@ class EngineStats:
         if self.lost_restarts or self.prefix_rederives:
             line += (f" | quarantine: {self.lost_restarts} restarts, "
                      f"{self.prefix_rederives} prefix re-derives")
+        if self.fused_ready_pages or self.fused_drained_pages:
+            line += (f" | fused {self.fused_ready_pages} ready + "
+                     f"{self.fused_drained_pages} drained in-kernel "
+                     f"({self.fused_tail_us:.0f}us tail)")
         att = self.slo_attainment()
         if att is not None:
             tiers = sorted(set(self.deadline_hits) | set(self.deadline_misses),
@@ -285,9 +312,16 @@ class ServingEngine:
                  injector=None):
         # ValueError, not assert: configuration validation must survive
         # ``python -O`` (asserts compile away under optimization).
-        if fault_mode not in ("async", "sync"):
+        if fault_mode not in ("async", "sync", "fused"):
             raise ValueError(
-                f"fault_mode must be 'async' or 'sync', got {fault_mode!r}")
+                f"fault_mode must be 'async', 'sync' or 'fused', "
+                f"got {fault_mode!r}")
+        if fault_mode == "fused" and cfg.mla is not None:
+            # The fused path stages dense (k, v) page payloads into the
+            # attention kernel; MLA's latent pools take a different
+            # decode path that cannot consume them.
+            raise ValueError("fault_mode='fused' supports dense-attention "
+                             "families only (not MLA)")
         if victim_policy not in ("cost", "priority"):
             raise ValueError(
                 f"victim_policy must be 'cost' or 'priority', "
@@ -305,7 +339,7 @@ class ServingEngine:
         # Full-duplex outbound modeling (DESIGN.md §8): eviction gathers
         # and prefix parking ride the DMA channels' "out" lanes.  Only
         # the async pipeline has a channel timeline to ride.
-        self.duplex = duplex and fault_mode == "async"
+        self.duplex = duplex and fault_mode in ("async", "fused")
         # Deadline slack below which a resume candidate counts as urgent
         # for SLO-aware prefetch-depth planning.
         self.slo_urgency_us = slo_urgency_us
@@ -399,6 +433,14 @@ class ServingEngine:
         self.staging = StagingBuffer()
         self.prefetch = Prefetcher(depth=prefetch_depth)
         self._clock_us = 0.0
+        # Fused decode step state (DESIGN.md §13): DMA jobs whose pages
+        # this step's kernel consumes (settled at the decode-window end,
+        # not before decode), the staged ((shard, ppn), payload,
+        # arrive_us) entries awaiting the post-decode pool scatter, and
+        # the window-open timestamp splitting ready vs drained pages.
+        self._fused_jobs: List[DMAJob] = []
+        self._fused_staged: List[tuple] = []
+        self._fused_t0 = 0.0
         self._decode_jit = jax.jit(
             lambda p, t, pos, pools, ctx, st: self.lm.decode_step(
                 p, t, pos, pools, ctx, st))
@@ -745,6 +787,8 @@ class ServingEngine:
         caller must restart them."""
         if self.fault_mode == "sync":
             return self._fault_in_sync(seqs)
+        if self.fault_mode == "fused":
+            return self._fault_in_fused(seqs)
         return self._fault_in_async(seqs)
 
     @staticmethod
@@ -904,6 +948,178 @@ class ServingEngine:
         self._clock_us = now
         self._scatter_pages(gidx, payloads)
         return lost
+
+    # ------------------------------------------------ fused decode path
+
+    def _write_page_set(self, seqs: List[int]) -> set:
+        """(shard, ppn) of each sequence's current write page: the page
+        ``write_kv`` lands the new token in.  A staged write page must be
+        merged into the pool *before* decode — attention would otherwise
+        read the pre-write staged bytes and miss the new token."""
+        ftok = self.geo.frame_pages * self.geo.page_tokens
+        out = set()
+        for seq in seqs:
+            pos = self.cache.seq_tokens[seq] - 1
+            s = self.cache._shard_of_frame(pos // ftok)
+            table = self.cache.mgrs[s].tables[seq]
+            out.add((s, table.ppn[len(table.ppn) - 1]))
+        return out
+
+    def _fault_in_fused(self, seqs: List[int]) -> set:
+        """Fused gather-attend path (DESIGN.md §13): no pre-decode DMA
+        barrier.  This step's misses are resolved to *sources* — staged
+        payloads (consumed in-kernel from the staging region), in-flight
+        prefetch jobs, and freshly enqueued demand jobs — but the engine
+        never calls ``dma.wait`` here.  Decode launches immediately with
+        a per-page readiness mask; the collected jobs settle at the end
+        of the decode window (:meth:`_settle_fused`), exposing only the
+        transfer tail that outlives the window."""
+        self._fused_jobs = []
+        self._fused_staged = []
+        self._fused_t0 = self._clock_us
+        missing = self.cache.missing_pages(seqs)
+        if not missing:
+            return set()
+        lost = self._promote_missing(missing)       # disk stall stays exposed
+        missing = self._drop_lost_entries(missing, lost)
+        self._fused_t0 = self._clock_us
+        now = self._clock_us
+        pps = self.cache.pages_per_shard
+        write_pages = self._write_page_set(
+            [s for s in seqs if s in self.cache.seq_tokens])
+        jobs: Dict[int, DMAJob] = {}
+        waited: Dict[Tuple[int, int, int],
+                     Tuple[np.ndarray, np.ndarray]] = {}
+        arrive: Dict[Tuple[int, int, int], float] = {}
+        for s, entries in sorted(missing.items()):
+            demand: List[Tuple[int, int, int]] = []
+            for ppn, owner, vpn in entries:
+                key = (owner, s, vpn)
+                when = now          # staging hits: landed before this step
+                payload = waited.pop(key, None)
+                if payload is not None:
+                    when = arrive.get(key, now)
+                if payload is None:
+                    payload = self.staging.consume(key)
+                if payload is None and key in self.prefetch.in_flight:
+                    # In flight: consume in-kernel, do NOT stall — record
+                    # the page's modeled arrival on the µs timeline.
+                    job = self.prefetch.in_flight[key]
+                    jobs[job.job_id] = job
+                    self.prefetch.forget(job.keys)
+                    for i2, (k2, p2) in enumerate(
+                            zip(job.keys, job.payloads)):
+                        waited[k2] = p2
+                        arrive[k2] = job.page_done_us(i2)
+                    payload = waited.pop(key)
+                    when = arrive[key]
+                if payload is None:
+                    demand.append((ppn, owner, vpn))
+                    continue
+                self.cache.mgrs[s].residency.mark_resident([ppn])
+                self.host.pop(owner, s, vpn)
+                self.stats.faults += 1
+                self.stats.prefetch_hits += 1
+                self.prefetch.stats["hits"] += 1
+                self._fused_staged.append(((s, ppn), payload, when))
+            if demand:
+                self.cache.mgrs[s].residency.fault_in(
+                    [ppn for ppn, _o, _v in demand])
+                dpay = [self.host.pop(owner, s, vpn)
+                        for _ppn, owner, vpn in demand]
+                job = self.dma.enqueue(
+                    [(owner, s, vpn) for _p, owner, vpn in demand],
+                    [ppn for ppn, _o, _v in demand],
+                    self.cache.mgrs[s].residency.page_bytes, dpay,
+                    now, kind="demand")
+                jobs[job.job_id] = job
+                self.stats.faults += len(demand)
+                self.stats.fault_dmas += job.dma_count
+                self.stats.bytes_in += job.nbytes
+                self.stats.transfer_us += job.transfer_us
+                self.stats.prefetch_misses += len(demand)
+                self.prefetch.stats["misses"] += len(demand)
+                for i2, ((ppn, _o, _v), p) in enumerate(zip(demand, dpay)):
+                    self._fused_staged.append(
+                        ((s, ppn), p, job.page_done_us(i2)))
+        for key, payload in waited.items():
+            if self.host.has(*key) and key[0] not in self._foreign:
+                self.staging.stage(key, payload)
+            else:
+                self.prefetch.stats["wasted_pages"] += 1
+                self.stats.prefetch_wasted += 1
+        self._fused_jobs = sorted(jobs.values(), key=lambda j: j.job_id)
+        # The write page is merged at consumption time (it is mutated by
+        # this step's token write); everything else stays in staging for
+        # the kernel.  Its job still settles at the window end.
+        pre = [(sp, pl) for sp, pl, _t in self._fused_staged
+               if sp in write_pages]
+        if pre:
+            self._scatter_pages([s * pps + p for (s, p), _pl in pre],
+                                [pl for _sp, pl in pre])
+            self._fused_staged = [e for e in self._fused_staged
+                                  if e[0] not in write_pages]
+        self.stats.fault_steps += 1
+        return lost
+
+    def _attach_staging(self, ctx):
+        """Expose this step's staged arrivals to the decode kernel
+        (DESIGN.md §13): a dense step-local stage pool [L, NS, ptok,
+        n_kv, dh{,_v}] plus a slot table mirroring ``ctx.tables``
+        (-1 = pool-resident).  NS is padded to a power of two to bound
+        jit retraces across steps with different arrival counts."""
+        if not self._fused_staged or self.pools is None:
+            return ctx
+        pps = self.cache.pages_per_shard
+        gid = {s * pps + ppn: i
+               for i, ((s, ppn), _pl, _t) in enumerate(self._fused_staged)}
+        tables = np.asarray(ctx.tables)
+        slots = np.full(tables.shape, -1, np.int32)
+        for g, i in gid.items():
+            slots[tables == g] = i
+        kp = np.stack([pl[0] for _sp, pl, _t in self._fused_staged], axis=1)
+        vp = np.stack([pl[1] for _sp, pl, _t in self._fused_staged], axis=1)
+        ns = 1 << (kp.shape[1] - 1).bit_length()
+        if ns > kp.shape[1]:
+            kp = np.concatenate(
+                [kp, np.zeros((kp.shape[0], ns - kp.shape[1],
+                               *kp.shape[2:]), kp.dtype)], axis=1)
+            vp = np.concatenate(
+                [vp, np.zeros((vp.shape[0], ns - vp.shape[1],
+                               *vp.shape[2:]), vp.dtype)], axis=1)
+        return dataclasses.replace(
+            ctx, slots=jnp.asarray(slots),
+            stage_k=jnp.asarray(kp), stage_v=jnp.asarray(vp))
+
+    def _settle_fused(self) -> None:
+        """Post-decode sync point (DESIGN.md §13): the kernel drained
+        every staged page during the decode window, so the collected
+        jobs settle against the window *end* — transfer µs inside the
+        window are hidden, only tails past it are exposed.  The staged
+        payloads are then scattered so the device pool is authoritative
+        again before parking/preemption gathers run (same data-only
+        timing model as every `_scatter_pages` landing)."""
+        t_end = self._clock_us
+        now = t_end
+        for job in self._fused_jobs:
+            now = max(now, self.dma.wait(job, t_end))
+        if self._fused_jobs:
+            self.stats.fault_exposed_us += now - t_end
+            self.stats.fused_tail_us += now - t_end
+            self._clock_us = now
+        self.stats.fault_hidden_us = self.dma.stats["hidden_us"]
+        self._fused_jobs = []
+        if self._fused_staged:
+            t0 = self._fused_t0
+            ready = sum(1 for _sp, _pl, t in self._fused_staged if t <= t0)
+            self.stats.fused_ready_pages += ready
+            self.stats.fused_drained_pages += \
+                len(self._fused_staged) - ready
+            pps = self.cache.pages_per_shard
+            self._scatter_pages(
+                [s * pps + p for (s, p), _pl, _t in self._fused_staged],
+                [pl for _sp, pl, _t in self._fused_staged])
+            self._fused_staged = []
 
     # --------------------------------------------- async prefetch pipeline
 
@@ -1113,7 +1329,7 @@ class ServingEngine:
         # Admission-time fault-in through the async pipeline: the first
         # decode step that touches these pages finds them in flight (or
         # already staged) instead of paying a cold demand fault.
-        if self.fault_mode == "async":
+        if self.fault_mode in ("async", "fused"):
             by_shard: Dict[int, List[int]] = {}
             for i, (s, _vpn, _ppn) in enumerate(entries):
                 by_shard.setdefault(s, []).append(i)
@@ -1299,7 +1515,7 @@ class ServingEngine:
         # steps persist now, freeing write-back queue slots before this
         # step's admissions and parks consult park_allowed().
         self.host.pump(self._clock_us)
-        if self.fault_mode == "async":
+        if self.fault_mode in ("async", "fused"):
             # Stage 0: publish transfers that finished during the last
             # decode (double-buffer swap) so admission's resumes and this
             # step's fault-in see them as hits.
@@ -1343,10 +1559,19 @@ class ServingEngine:
             runnable = [r for r in runnable if r.rid not in lost]
             seqs = [r.rid for r in runnable]
             if not runnable:
+                if self.fault_mode == "fused":
+                    # No decode window opens: settle collected jobs and
+                    # land staged payloads at the current clock.
+                    self._settle_fused()
                 self.stats.wall_s += time.perf_counter() - t0
                 return bool(self.active or self.queue or self.preempted)
         ctx = self._ctx_global(self.cache.pack_ctx(seqs, self.mpps))
-        if self.fault_mode == "async":
+        if self.fault_mode == "fused":
+            # Start-decode-on-resident: hand the kernel this step's
+            # staged arrivals + readiness mask instead of stalling for
+            # them (DESIGN.md §13).
+            ctx = self._attach_staging(ctx)
+        if self.fault_mode in ("async", "fused"):
             # Stage 2: predicted next-step touches ride the DMA channels
             # while the decode below computes — their µs become hidden.
             self._issue_prefetch()
@@ -1363,6 +1588,12 @@ class ServingEngine:
         self._clock_us += (self.decode_window_us
                            if self.decode_window_us is not None
                            else (time.perf_counter() - t_dec) * 1e6)
+        if self.fault_mode == "fused":
+            # Drain-within-kernel settled: jobs consumed this step charge
+            # only the tail past the window, and the staged payloads are
+            # scattered so the pool is authoritative before the parking
+            # gathers in the retire loop below (DESIGN.md §13).
+            self._settle_fused()
         # The decode window may have carried queued write-backs past
         # their disk-ready time: persist them before the completion
         # parks below ask park_allowed().
@@ -1452,7 +1683,7 @@ class ServingEngine:
                 and steps < max_steps:
             self.step()
             steps += 1
-        if self.fault_mode == "async" and not (
+        if self.fault_mode in ("async", "fused") and not (
                 self.queue or self.active or self.preempted):
             # Settle transfers still riding the channels so the reported
             # hidden/exposed/wasted split covers every issued byte (a

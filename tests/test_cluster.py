@@ -568,3 +568,51 @@ def test_frame_table_invariants_under_randomized_failure_sequences():
     tier.flush()
     tier.check_invariants()
     tier.spill_store.close()
+
+
+# -------------------------------------------------- victim scoring (§11/§13)
+
+
+def test_spill_victim_cost_scoring_diverges_from_lru():
+    """A/B the two policies on the same access trace: frame A is full
+    (2 pages) but cold, frame B holds one hot page.  Pure LRU spills B
+    (stalest tick once A is touched last); cost scoring spills A — its
+    hit-frequency × promote-cost score is lower despite the fresh tick."""
+    picks = {}
+    for policy in ("lru", "cost"):
+        ft = HostFrameTable(frame_pages=2, victim_scoring=policy)
+        ft.place(0, (1, 0, 0))                 # frame A …
+        ft.place(0, (1, 0, 1))                 # … full at 2 pages
+        ft.place(0, (1, 0, 2))                 # frame B, 1 page
+        for _ in range(8):
+            ft.touch((1, 0, 2))                # B is hot
+        ft.touch((1, 0, 0))                    # A touched last (fresh tick)
+        picks[policy] = ft.spill_victim()
+    assert picks["lru"] == 1                   # stalest tick
+    assert picks["cost"] == 0                  # cheapest to re-promote
+    assert picks["lru"] != picks["cost"]
+
+
+def test_spill_victim_cost_ties_break_by_lru_tick():
+    ft = HostFrameTable(frame_pages=1, victim_scoring="cost")
+    ft.place(0, (1, 0, 0))
+    ft.place(0, (1, 0, 1))
+    ft.touch((1, 0, 0))                        # equal hits+size, older tick
+    assert ft.spill_victim() == 1              # (1,0,1) never re-touched
+
+
+def test_recycled_frame_does_not_inherit_heat():
+    ft = HostFrameTable(frame_pages=1, victim_scoring="cost")
+    ft.place(0, (1, 0, 0))
+    for _ in range(10):
+        ft.touch((1, 0, 0))                    # frame 0 runs hot
+    hot = ft._frame_hits[0]
+    ft.release((1, 0, 0))                      # frame 0 recycled …
+    ft.place(0, (2, 0, 0))                     # … by a fresh lease
+    assert ft.frame_of((2, 0, 0)) == 0
+    assert ft._frame_hits[0] < hot             # heat wiped, not inherited
+
+
+def test_victim_scoring_flag_validated():
+    with pytest.raises(ValueError, match="victim_scoring"):
+        HostFrameTable(frame_pages=2, victim_scoring="mru")

@@ -229,6 +229,71 @@ def test_reclaim_domain_recycles_whole_frames_and_spares_prefix():
     tier.spill_store.close()
 
 
+def test_tier_undegrades_after_probe_successes():
+    """Transient-bounded write errors: the tier degrades while the disk
+    misbehaves, periodic probes observe recovery, and after the success
+    streak the spill path is re-enabled (counters track every cycle)."""
+    inj = FaultInjector(FaultPlan(seed=1, disk_write_error_rate=1.0,
+                                  max_transient_failures=2))
+    tier = _tier(injector=inj, undegrade_probe_interval_us=100.0,
+                 undegrade_probe_successes=3)
+    v = tier.view(0)
+    for i in range(12):                       # overflow the 2-frame cap
+        v.put(1, 0, i, *_payload(float(i)))
+    t = 0.0
+    for _ in range(20):
+        t += 1000.0
+        tier.pump(t)
+    assert not tier.degraded and tier.stats["degraded"] == 0
+    assert tier.spill_enabled                 # spill path back in service
+    assert tier.stats["degrades"] >= 1        # it did fall over first
+    assert tier.stats["undegrades"] >= 1
+    assert tier.stats["probes"] >= tier.stats["undegrades"] * 3
+    for i in range(12):                       # zero data loss throughout
+        assert np.array_equal(v.peek(1, 0, i)[0], _payload(float(i))[0])
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_tier_stays_degraded_while_probes_fail():
+    """Unbounded write errors (the faults-bench 'degrade' plan): every
+    probe write fails too, the success streak never builds, and the
+    tier remains on the hard-cap path forever — the committed
+    ``claim_faults_degrade_zero_drops`` depends on this."""
+    inj = FaultInjector(FaultPlan(disk_write_error_rate=1.0,
+                                  max_transient_failures=10 ** 6))
+    tier = _tier(injector=inj, undegrade_probe_interval_us=100.0)
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    assert tier.degraded
+    t = tier._now_us
+    for _ in range(10):
+        t += 1000.0
+        tier.pump(t)
+    assert tier.degraded and tier.stats["undegrades"] == 0
+    assert tier.stats["probes"] >= 1
+    assert tier.stats["probe_failures"] == tier.stats["probes"]
+    tier.check_invariants()
+    tier.spill_store.close()
+
+
+def test_tier_probing_disabled_never_probes():
+    inj = FaultInjector(FaultPlan(disk_write_error_rate=1.0,
+                                  max_transient_failures=10 ** 6))
+    tier = _tier(injector=inj, undegrade_probe_interval_us=None)
+    v = tier.view(0)
+    _fill(v, 9, 8)
+    tier.flush()
+    assert tier.degraded
+    t = tier._now_us
+    for _ in range(10):
+        t += 100_000.0
+        tier.pump(t)
+    assert tier.degraded and tier.stats["probes"] == 0
+    tier.spill_store.close()
+
+
 # ------------------------------------------------------------ router & engine
 
 
