@@ -15,6 +15,7 @@ Suites:
   overlap  sync vs async double-buffered fault-in + link contention (§7)
   prefix-reuse  content-hash prefix cache + full-duplex DMA (§8)
   cluster  shared host tier + deadline router + migration (§10)
+  router   modeled-µs cost routing + queued steal + pre-staging (§14)
   spill    disk spill tier + write-back back-pressure     (§11)
   faults   crash recovery + spill integrity + degrade     (§12)
   fused-decode  fused gather-attend decode vs sync/async  (§13)
@@ -147,6 +148,7 @@ def main(argv=None):
             + serving_bench.cluster_router_compare()
             + serving_bench.cluster_migration_compare()
             + serving_bench.cluster_sim_compare(n_access=n // 2)),
+        "router": serving_bench.router_cost_compare,
         "spill": lambda: (
             serving_bench.spill_compare(n_engines=args.engines)
             + serving_bench.spill_backpressure_compare()

@@ -670,9 +670,13 @@ def run_cluster_slo(policy: str, *, n_engines: int = 2):
     from repro.serving.cluster import ServingCluster
 
     cfg = get_smoke_config("qwen2.5-3b")
+    # Queued steal (§14) would re-dispatch FIFO's misrouted burst and
+    # erase the policy contrast — off here to isolate the dispatch
+    # ordering; the steal is measured on its own in the `router` suite.
     cluster = ServingCluster(cfg, geometry=GEO, n_engines=n_engines,
                              max_batch=2, max_seq=128, seed=0,
                              router_policy=policy, migrate=False,
+                             router_steal_queued=False,
                              decode_window_us=1000.0)
     rng = np.random.default_rng(0)
     long_reqs = [Request(rid=i, tenant=0,
@@ -722,6 +726,160 @@ def cluster_router_compare() -> List[Dict]:
                      bool(att["slack"] > att["fifo"]),
                  "claim_cluster_router_tokens_identical": identical})
     assert identical, "router policy changed model outputs!"
+    return rows
+
+
+def run_router_burst(cost_model: str, prestage: bool, *,
+                     steal_queued: bool = True,
+                     deadline_us: float = 12_000.0):
+    """Heterogeneous load where token counting misroutes (DESIGN.md §14).
+
+    Replica 0 carries two *decode-heavy* requests (few prompt pages, many
+    windows: cheap in token-units, expensive in modeled µs); replica 1
+    carries a queue of *prompt-heavy* requests (many prompt pages, two
+    tokens each: expensive in token-units, cheap in µs — prefill is wall
+    work hidden inside the decode window).  A burst of tight-deadline
+    shared-prefix requests then arrives unpinned: token counting sends it
+    behind replica 0's long decodes, the modeled cost to replica 1.
+
+    The shared prefix is parked up front and then deliberately spilled to
+    disk by a wave of large parks, so admissions pay a disk promote —
+    unless pre-staging already promoted and staged the pages at dispatch
+    time.  A final idle-cluster wave (prefix re-spilled first) isolates
+    that effect: per-engine ``admit_lat_us`` counts are snapshotted just
+    before it so the caller can take a wave-local admit p99.
+    """
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=2,
+                             max_batch=2, max_seq=128, seed=0,
+                             capacity_frames=3, spill=True, migrate=False,
+                             router_cost_model=cost_model,
+                             router_prestage=prestage,
+                             router_steal_queued=steal_queued,
+                             decode_window_us=1000.0)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+
+    def _req(rid, tokens, max_new, *, shared_prefix=False, tenant=0,
+             deadline_us=None):
+        suf = rng.integers(0, cfg.vocab_size, tokens).astype(np.int32)
+        prompt = np.concatenate([shared, suf]) if shared_prefix else suf
+        return Request(rid=rid, tenant=tenant, prompt=prompt,
+                       max_new=max_new, deadline_us=deadline_us)
+
+    # Park the shared prefix, then spill it with a wave of large parks.
+    warm = _req(0, 8, 2, shared_prefix=True)
+    spillers = [_req(1 + i, 64, 2) for i in range(3)]
+    cluster.submit(warm, engine=0)
+    cluster.run_until_drained(max_steps=200)
+    for r in spillers:
+        cluster.submit(r, engine=0)
+    cluster.run_until_drained(max_steps=400)
+
+    # Pre-load: decode-heavy on replica 0, prompt-heavy on replica 1 —
+    # queued (not yet stepped) so both cost models see the full backlog.
+    heavy = [_req(10, 16, 28, tenant=1), _req(11, 16, 24, tenant=1)]
+    wide = [_req(12 + i, 64, 2, tenant=1) for i in range(7)]
+    for r in heavy:
+        cluster.submit(r, engine=0)
+    for r in wide:
+        cluster.submit(r, engine=1)
+    # One step admits the decode-heavy pair into replica 0's batch slots
+    # (equal priority: the burst cannot displace them, only queue).
+    cluster.step()
+
+    # The burst: unpinned, tight deadlines, heterogeneous suffixes.
+    now = max(e._clock_us for e in cluster.engines)
+    burst = [_req(100 + i, suf_tok, 3, shared_prefix=True, tenant=2,
+                  deadline_us=now + deadline_us)
+             for i, suf_tok in enumerate((8, 16, 8, 16))]
+    for r in burst[:2]:
+        cluster.submit(r)
+    cluster.step()
+    for r in burst[2:]:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=1500)
+
+    # Re-spill the prefix, then measure admission cost on an idle
+    # cluster: with pre-staging the disk promote happens at dispatch
+    # time, so the admit sample is prefill compute alone.
+    respill = [_req(20 + i, 64, 2) for i in range(3)]
+    for r in respill:
+        cluster.submit(r, engine=0)
+    cluster.run_until_drained(max_steps=400)
+    starts = [len(e.stats.admit_lat_us) for e in cluster.engines]
+    probe = [_req(200 + i, 8, 2, shared_prefix=True, tenant=2)
+             for i in range(4)]
+    for r in probe:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=400)
+
+    reqs = [warm] + spillers + heavy + wide + burst + respill + probe
+    assert all(r.done for r in reqs), "router bench not drained"
+    cluster.check_invariants()
+    probe_lat = [x for e, s in zip(cluster.engines, starts)
+                 for x in e.stats.admit_lat_us[s:]]
+    return cluster, reqs, probe_lat
+
+
+def router_cost_compare() -> List[Dict]:
+    """Token-count vs modeled-µs routing vs modeled + pre-staging.
+
+    Claims: (a) tokens byte-identical across all three configs (routing
+    and pre-staging move *when* bytes arrive, never what decode
+    computes); (b) modeled cost beats token counting on SLO attainment
+    under the heterogeneous burst; (c) pre-staging cuts the probe-wave
+    admit p99 versus the same modeled router without it.
+    """
+    rows = []
+    outs, att, p99s = {}, {}, {}
+    # "tokens" is the pre-§14 router verbatim: token-count load, no
+    # queued steal, no pre-staging.  The modeled rows are the new router
+    # with and without pre-staging.
+    configs = (("tokens", "tokens", False, False),
+               ("modeled", "modeled", False, True),
+               ("modeled+prestage", "modeled", True, True))
+    for mode, cost_model, prestage, steal in configs:
+        cluster, reqs, probe_lat = run_router_burst(
+            cost_model, prestage, steal_queued=steal)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        cs = cluster.stats()
+        t = cs.totals
+        att[mode] = cs.slo_attainment()
+        p99s[mode] = float(np.percentile(probe_lat, 99)) \
+            if probe_lat else 0.0
+        rs = cluster.router.stats
+        rows.append({
+            "bench": "router", "mode": mode,
+            "engines": len(cluster.engines),
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "deadline_hits": sum(t.deadline_hits.values()),
+            "deadline_misses": sum(t.deadline_misses.values()),
+            "slo_attainment": round(att[mode], 3),
+            "dispatched": "/".join(
+                str(rs.dispatched.get(i, 0))
+                for i in range(len(cluster.engines))),
+            "queued_steals": rs.queued_steals,
+            "prestaged_requests": rs.prestaged_requests,
+            "prestage_hits": t.prestage_hits,
+            "prestage_wasted": t.prestage_wasted,
+            "prestage_cancelled": t.prestage_cancelled,
+            "admit_p99_probe_us": round(p99s[mode], 1),
+            "promote_stall_us": round(t.promote_stall_us, 1),
+        })
+    identical = (outs["tokens"] == outs["modeled"]
+                 == outs["modeled+prestage"])
+    rows.append({
+        "bench": "router", "mode": "CLAIM",
+        "claim_router_tokens_identical": identical,
+        "claim_router_modeled_cost_raises_slo_attainment":
+            bool(att["modeled"] > att["tokens"]),
+        "claim_router_prestage_cuts_admit_p99":
+            bool(p99s["modeled+prestage"] < p99s["modeled"]),
+    })
+    assert identical, "router cost model / pre-staging changed tokens!"
     return rows
 
 

@@ -257,6 +257,25 @@ class Link:
         return max(max(max(l) for l in self._lanes_in),
                    max(max(l) for l in self._lanes_out))
 
+    def engine_occupancy(self, now: float, engine: int = 0) -> float:
+        """Cost-model parity hook (DESIGN.md §14): one engine's modeled
+        lane backlog, in cycles — booked time beyond ``now`` on the
+        engine's own link lanes plus its share of the host-store and
+        disk lanes.  This mirrors the link-/host-/disk-lane occupancy
+        terms the serving router's modeled-µs dispatch cost charges, so
+        the sim and the router agree (monotonically) on which engine is
+        more loaded: booking more traffic on an engine's lanes can only
+        raise its occupancy, never lower it.
+        """
+        e = engine % len(self._lanes_in)
+        backlog = sum(max(0.0, t - now) for t in self._lanes_in[e])
+        if self._lanes_out[e] is not self._lanes_in[e]:    # duplex only
+            backlog += sum(max(0.0, t - now) for t in self._lanes_out[e])
+        for shared in (self._host_lanes, self._disk_lanes):
+            if shared:
+                backlog += sum(max(0.0, t - now) for t in shared)
+        return backlog
+
     def _occupy(self, lanes, now: float, transfer: float):
         ch = min(range(len(lanes)), key=lambda i: lanes[i])
         begin = max(now, lanes[ch])

@@ -1180,6 +1180,12 @@ class ClusterStats:
             + (", ".join(f"e{i}:{n}" for i, n in sorted(r.dispatched.items()))
                or "-")
             + f" | migrations {r.migrations} ({r.migrated_pages} pages)")
+        if r.queued_steals or r.prestaged_requests:
+            lines.append(
+                f"  router §14: {r.queued_steals} queued steals | "
+                f"{r.prestaged_requests} pre-staged, "
+                f"{r.prestage_cancels} cancelled "
+                f"({r.prestage_refund_us:.0f}us refunded)")
         if self.tier is not None:
             fs = self.tier.frames.stats
             lines.append(
@@ -1217,6 +1223,9 @@ class ServingCluster:
                  prefix_cache: bool = True,
                  prefix_capacity_pages: int = 4096,
                  router_policy: str = "slack", migrate: bool = True,
+                 router_cost_model: str = "modeled",
+                 router_prestage: bool = False,
+                 router_steal_queued: bool = True,
                  capacity_frames: Optional[int] = None,
                  spill: bool = True, spill_dir: Optional[str] = None,
                  wb_queue_frames: int = 4, wb_lanes: int = 1,
@@ -1270,7 +1279,10 @@ class ServingCluster:
             self.engines.append(eng)
         self.router = RequestRouter(self.engines, tier=self.tier,
                                     policy=router_policy, migrate=migrate,
-                                    injector=fault_injector)
+                                    injector=fault_injector,
+                                    cost_model=router_cost_model,
+                                    prestage=router_prestage,
+                                    steal_queued=router_steal_queued)
 
     # ------------------------------------------------------------- serving
 

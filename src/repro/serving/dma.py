@@ -167,6 +167,8 @@ class AsyncDMAEngine:
             "transfer_us_out": 0.0, "hidden_us_out": 0.0,
             "exposed_us_out": 0.0, "queue_us_out": 0.0,
             "injected_stall_us": 0.0,
+            "cancelled_jobs": 0,
+            "refunded_us": 0.0, "refunded_us_out": 0.0,
         }
 
     @staticmethod
@@ -247,6 +249,45 @@ class AsyncDMAEngine:
                 j.settled = True
             del self.in_flight[j.job_id]
         return sorted(done, key=lambda j: (j.done_us, j.job_id))
+
+    def cancel(self, job: DMAJob, now_us: float) -> float:
+        """Cancel an in-flight job and refund the un-elapsed lane time.
+
+        Used by pre-staging when a steal or a crash retargets a queued
+        request (DESIGN.md §14).  The elapsed portion of the transfer
+        already moved bytes; it settles as *hidden* µs (wasted, but the
+        lane time was genuinely spent overlapped with other work).  The
+        un-elapsed remainder is refunded: if the job is still the last
+        booking on its channel the lane's busy horizon rolls back to the
+        cancellation point, and the refunded µs leave ``transfer_us`` so
+        the per-direction ``hidden + exposed == Σ transfer_us`` invariant
+        holds over settled jobs.  A job that later transfers already
+        queued behind cannot be un-booked — the lane stays busy either
+        way — so its whole transfer settles as hidden with zero refund.
+        Returns the refunded µs.
+        """
+        if job.settled or job.job_id not in self.in_flight:
+            return 0.0
+        sfx = self._sfx(job.direction)
+        now = float(now_us)
+        elapsed = min(max(0.0, now - job.start_us), job.transfer_us)
+        free = self.channel_free[job.direction]
+        refund = 0.0
+        if free[job.channel] == job.done_us:
+            refund = job.transfer_us - elapsed
+            # Roll the lane back to start+elapsed (this also drops any
+            # injected stall tail — a cancelled job no longer occupies
+            # its throttled lane past the cancellation point).
+            free[job.channel] = max(job.start_us, min(now, job.done_us))
+        else:
+            elapsed = job.transfer_us
+        self.stats[f"hidden_us{sfx}"] += elapsed
+        self.stats[f"transfer_us{sfx}"] -= refund
+        self.stats[f"refunded_us{sfx}"] += refund
+        self.stats["cancelled_jobs"] += 1
+        job.settled = True
+        del self.in_flight[job.job_id]
+        return refund
 
     # ------------------------------------------------------------- queries
 

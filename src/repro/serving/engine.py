@@ -97,7 +97,7 @@ from repro.core.cocoa import OutOfMemory
 from repro.core.demand_paging import LinkModel
 from repro.kernels import ops as kops
 from repro.models.lm import LM
-from repro.serving.dma import (AsyncDMAEngine, DMAJob, Prefetcher,
+from repro.serving.dma import (AsyncDMAEngine, DMAJob, Key, Prefetcher,
                                StagingBuffer)
 from repro.serving.host_tier import HostPageStore, PrefixIndex
 from repro.serving.kv_cache import ShardedKVCache
@@ -194,6 +194,18 @@ class EngineStats:
     fused_ready_pages: int = 0
     fused_drained_pages: int = 0
     fused_tail_us: float = 0.0
+    # Proactive pre-staging of queued work (DESIGN.md §14): pages the
+    # router faulted toward this engine before the owning request's
+    # admission step.  *hit* — admission (or fault-in) found the page
+    # staged/in-flight and skipped its own transfer; *wasted* — staged
+    # but never consumed (prefix re-matched differently, request
+    # retired first); *cancelled* — dropped by a steal/crash retarget,
+    # with the un-elapsed lane time refunded (``prestage_refund_us``).
+    prestaged_pages: int = 0
+    prestage_hits: int = 0
+    prestage_wasted: int = 0
+    prestage_cancelled: int = 0
+    prestage_refund_us: float = 0.0
 
     def note_deadline(self, priority: int, hit: bool) -> None:
         d = self.deadline_hits if hit else self.deadline_misses
@@ -280,6 +292,10 @@ class EngineStats:
             line += (f" | fused {self.fused_ready_pages} ready + "
                      f"{self.fused_drained_pages} drained in-kernel "
                      f"({self.fused_tail_us:.0f}us tail)")
+        if self.prestaged_pages:
+            line += (f" | prestage {self.prestaged_pages} pages "
+                     f"({self.prestage_hits}/{self.prestage_wasted}/"
+                     f"{self.prestage_cancelled} hit/wasted/cancelled)")
         att = self.slo_attainment()
         if att is not None:
             tiers = sorted(set(self.deadline_hits) | set(self.deadline_misses),
@@ -432,6 +448,13 @@ class ServingEngine:
                                   duplex=duplex, injector=injector)
         self.staging = StagingBuffer()
         self.prefetch = Prefetcher(depth=prefetch_depth)
+        # Keys pre-staged toward this engine for still-queued requests
+        # (DESIGN.md §14), mapped to the source page's owner id (prefix
+        # owners are minted once and never reused, so a matching owner
+        # proves the staged bytes are the ones admission would fetch).
+        # Consumed → prestage_hits, invalidated at retire/export →
+        # prestage_wasted, retargeted by steal/crash → cancelled.
+        self._prestage_keys: Dict[Key, int] = {}
         self._clock_us = 0.0
         # Fused decode step state (DESIGN.md §13): DMA jobs whose pages
         # this step's kernel consumes (settled at the decode-window end,
@@ -681,6 +704,7 @@ class ServingEngine:
         self.preempted.remove(r)
         bundle = {"request": r, "state": self.states.pop(rid, None),
                   "saved_tokens": self._saved_tokens.pop(rid)}
+        self._note_prestage_waste(rid)
         dropped = self.staging.invalidate_seq(rid)
         self.stats.prefetch_wasted += dropped
         self.prefetch.stats["wasted_pages"] += dropped
@@ -701,6 +725,117 @@ class ServingEngine:
             self.states[r.rid] = bundle["state"]
         self._saved_tokens[r.rid] = bundle["saved_tokens"]
         self.stats.migrations_in += 1
+
+    # ------------------------------------------------ proactive pre-staging
+    # (DESIGN.md §14) The router calls these for *queued*, never-admitted
+    # requests: once a target engine is picked, the request's prefix-index
+    # hits and resume pages start faulting toward this engine's staging
+    # buffers over the regular prefetch DMA lanes, so the later admission
+    # step finds the transfers already in flight.  Strictly timing-only:
+    # the probe is read-only (``peek_match``), allocation and scheduling
+    # are untouched, and the staged payloads are byte-identical to what
+    # admission would have fetched — tokens cannot change.
+
+    def prestage_queued(self, req: Request) -> int:
+        """Fault ``req``'s known-reusable pages toward staging before its
+        admission step; returns the number of pages issued.
+
+        Two sources: host copies the rid already owns (a re-queued /
+        crash-requeued request resuming from the host tier) and
+        prefix-index hits, staged under the exact ``(rid, shard, vpn)``
+        keys :meth:`_prefill_suffix` will enqueue, so admission dedups
+        against them.  Spilled frames are promoted here — moving the
+        disk read off the admission critical path is the point — but the
+        promote stall is *not* charged to this engine's clock: it is
+        background work on the tier's disk lanes.
+        """
+        if self.fault_mode not in ("async", "fused") or not self.alive:
+            return 0
+        tier = getattr(self.host, "tier", None)
+        keys: List[Key] = []
+        srcs: List[Key] = []
+        for key in self.host.seq_pages(req.rid):
+            if self.staging.contains(key) or key in self.prefetch.in_flight:
+                continue
+            keys.append(key)
+            srcs.append(key)
+        prefix_pages = []
+        if self.prefix is not None and self.prefix_supported:
+            ptok = self.geo.page_tokens
+            n, pages = self.prefix.peek_match(req.prompt)
+            n = min(n, (len(req.prompt) - 1) // ptok)
+            for pg in pages[:n]:
+                key = (req.rid, pg.shard, pg.vpn)
+                if self.staging.contains(key) \
+                        or key in self.prefetch.in_flight:
+                    continue
+                keys.append(key)
+                srcs.append((pg.owner, pg.shard, pg.vpn))
+                prefix_pages.append((key, pg))
+        if not keys:
+            return 0
+        # Promote any spilled source frames now (tier-modeled disk time,
+        # off the admission path); a quarantine may destroy sources —
+        # drop those from the batch rather than staging garbage.
+        self.host.ensure_resident(srcs, now_us=self._clock_us)
+        live = [(k, s) for k, s in zip(keys, srcs) if self.host.has(*s)]
+        if not live:
+            return 0
+        keys = [k for k, _ in live]
+        payloads = [self.host.peek(*s) for _, s in live]
+        if any(p is None for p in payloads):
+            return 0
+        job = self.dma.enqueue(keys, list(range(len(keys))),
+                               self.page_bytes, payloads, self._clock_us,
+                               kind="prefetch")
+        self._account_prefetch(job)
+        for (k, s) in live:
+            self._prestage_keys[k] = s[0]       # source owner fingerprint
+        self.stats.prestaged_pages += len(keys)
+        return len(keys)
+
+    def cancel_prestage(self, rid: int) -> float:
+        """Cancel ``rid``'s pre-staged pages (a steal or a crash
+        retargeted the request before admission).  In-flight jobs whose
+        pages are all pre-stage work for this rid are cancelled with a
+        lane-time refund for the un-elapsed transfer remainder; payloads
+        already staged are dropped.  Returns the refunded µs."""
+        refunded = 0.0
+        jobs: Dict[int, "DMAJob"] = {}
+        for key, job in list(self.prefetch.in_flight.items()):
+            if key[0] == rid and key in self._prestage_keys:
+                jobs[job.job_id] = job
+        for job in jobs.values():
+            if not all(k[0] == rid and k in self._prestage_keys
+                       for k in job.keys):
+                continue            # mixed job: let it settle normally
+            refunded += self.dma.cancel(job, self._clock_us)
+            self.prefetch.forget(job.keys)
+            self.stats.prestage_cancelled += len(job.keys)
+            for k in job.keys:
+                self._prestage_keys.pop(k, None)
+        mine = [k for k in self._prestage_keys if k[0] == rid]
+        if mine:
+            for k in mine:
+                self._prestage_keys.pop(k, None)
+            self.stats.prestage_cancelled += \
+                self.staging.invalidate_seq(rid)
+        self.prefetch.cancel_seq(rid)
+        self.stats.prestage_refund_us += refunded
+        self.stats.transfer_us = max(0.0, self.stats.transfer_us - refunded)
+        return refunded
+
+    def _note_prestage_hit(self, key: Key) -> None:
+        if self._prestage_keys.pop(key, None) is not None:
+            self.stats.prestage_hits += 1
+
+    def _note_prestage_waste(self, rid: int) -> None:
+        """Account pre-staged pages the request never consumed (counted
+        at the same invalidation points as prefetch waste)."""
+        stale = [k for k in self._prestage_keys if k[0] == rid]
+        for k in stale:
+            self._prestage_keys.pop(k, None)
+            self.stats.prestage_wasted += 1
 
     def _free_pages_total(self) -> int:
         return sum(m.config.num_pages - int(m.pool.page_allocated.sum())
@@ -747,6 +882,7 @@ class ServingEngine:
         self.states.pop(r.rid, None)
         self.host.drop_seq(r.rid)
         self.host.take_lost(r.rid)   # clear a flag re-set during the drop
+        self._note_prestage_waste(r.rid)
         dropped = self.staging.invalidate_seq(r.rid)
         self.stats.prefetch_wasted += dropped
         self.prefetch.stats["wasted_pages"] += dropped
@@ -907,6 +1043,7 @@ class ServingEngine:
                 self.host.pop(owner, s, vpn)
                 self.stats.faults += 1
                 self.stats.prefetch_hits += 1
+                self._note_prestage_hit(key)
                 self.prefetch.stats["hits"] += 1
                 gidx.append(s * pps + ppn)
                 payloads.append(payload)
@@ -1020,6 +1157,7 @@ class ServingEngine:
                 self.host.pop(owner, s, vpn)
                 self.stats.faults += 1
                 self.stats.prefetch_hits += 1
+                self._note_prestage_hit(key)
                 self.prefetch.stats["hits"] += 1
                 self._fused_staged.append(((s, ppn), payload, when))
             if demand:
@@ -1132,7 +1270,11 @@ class ServingEngine:
                 continue    # outbound gathers: settled by drain, no staging
             self.prefetch.forget(job.keys)
             for key, payload in zip(job.keys, job.payloads):
-                if self.host.has(*key) and key[0] not in self._foreign:
+                # Pre-staged keys (DESIGN.md §14) stage under the rid
+                # *before* admission registers the host copy, so they
+                # pass on _prestage_keys membership, not host.has.
+                if (self.host.has(*key) or key in self._prestage_keys) \
+                        and key[0] not in self._foreign:
                     self.staging.stage(key, payload)
                 else:   # owner retired/migrated while the DMA was in flight
                     self.prefetch.stats["wasted_pages"] += 1
@@ -1330,8 +1472,28 @@ class ServingEngine:
         # decode step that touches these pages finds them in flight (or
         # already staged) instead of paying a cold demand fault.
         if self.fault_mode in ("async", "fused"):
+            # Pre-staged keys whose source owner no longer matches are
+            # stale — the index churned between the router's probe and
+            # this admission and re-parked different bytes at the same
+            # (shard, vpn).  Cancel the whole rid's pre-stage before the
+            # dedup pass: byte identity beats saving a transfer.
+            if any(self._prestage_keys.get((req.rid, s, vpn),
+                                           pages[i].owner) != pages[i].owner
+                   for i, (s, vpn, _ppn) in enumerate(entries)):
+                self.cancel_prestage(req.rid)
             by_shard: Dict[int, List[int]] = {}
-            for i, (s, _vpn, _ppn) in enumerate(entries):
+            for i, (s, vpn, _ppn) in enumerate(entries):
+                key = (req.rid, s, vpn)
+                if key in self._prestage_keys and (
+                        self.staging.contains(key)
+                        or key in self.prefetch.in_flight):
+                    # Pre-staged toward this engine while the request
+                    # was still queued (DESIGN.md §14): the identical
+                    # payload is already staged or in flight under this
+                    # exact key — issuing (and charging) the transfer
+                    # again would double-book the lane.
+                    self._note_prestage_hit(key)
+                    continue
                 by_shard.setdefault(s, []).append(i)
             for s, idxs in sorted(by_shard.items()):
                 job = self.dma.enqueue(
@@ -1620,6 +1782,7 @@ class ServingEngine:
             self.cache.free(r.rid)
             self.states.pop(r.rid, None)
             self.host.drop_seq(r.rid)
+            self._note_prestage_waste(r.rid)
             dropped = self.staging.invalidate_seq(r.rid)
             self.stats.prefetch_wasted += dropped
             self.prefetch.stats["wasted_pages"] += dropped

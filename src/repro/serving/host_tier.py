@@ -498,6 +498,22 @@ class PrefixIndex:
         self.stats["hit_pages"] += len(pages)
         return len(pages), pages
 
+    def peek_match(self, tokens: np.ndarray) -> Tuple[int, List[PrefixPage]]:
+        """Read-only probe of :meth:`match`: the same longest-cached-
+        prefix walk, but it touches *nothing* — no LRU tick, no per-page
+        hit counters, no lookup stats.  The router's pre-staging probes
+        with this before a request is admitted (DESIGN.md §14), so a
+        probe that is later cancelled by a steal or a crash can never
+        perturb eviction order or the hit-rate numbers the benches pin.
+        """
+        pages: List[PrefixPage] = []
+        for h in self.chain_hashes(tokens):
+            page = self._pages.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return len(pages), pages
+
     def payload(self, page: PrefixPage) -> Tuple[np.ndarray, np.ndarray]:
         return self.store.peek(page.owner, page.shard, page.vpn)
 

@@ -1,16 +1,22 @@
-"""Deadline-aware request router + work-stealing migration (DESIGN.md §10).
+"""Deadline-aware request router + work-stealing migration (DESIGN.md §10/§14).
 
 The cluster front door: requests are submitted to the router, not to an
-engine.  Each router step runs three phases:
+engine.  Each router step runs four phases:
 
 1. **Dispatch** — pending requests are assigned to engines.  Under the
    default ``policy="slack"`` the pending set is ordered highest
    priority first, tightest deadline first within a tier (deadline-free
-   requests last, FIFO — the same rank the engines' own admission loops
-   use, so the cluster and the engine agree about who is urgent), and
-   each request goes to the least-loaded engine at that moment.
-   ``policy="fifo"`` keeps arrival order and round-robins engines — the
-   baseline the ``cluster`` bench compares SLO attainment against.
+   requests last, rid order — the same rank the engines' own admission
+   loops use, so the cluster and the engine agree about who is urgent),
+   and each request goes to the **cheapest** engine at that moment:
+   :meth:`engine_cost_us`, a modeled-µs completion estimate built from
+   the engine's wall clock, its DMA link-lane occupancy, its batched
+   decode backlog (critical path vs throughput), and — when a shared
+   tier is attached — disk promote debt and write-back (host-lane)
+   occupancy
+   (DESIGN.md §14).  ``cost_model="tokens"`` keeps the PR 4 token-count
+   heuristic for A/B benches; ``policy="fifo"`` keeps arrival order and
+   round-robins engines.
 2. **Step** — every engine with work runs one
    :meth:`~repro.serving.engine.ServingEngine.step`.  Afterwards the
    engines' modeled µs clocks are synced to the cluster maximum: the
@@ -18,18 +24,33 @@ engine.  Each router step runs three phases:
    thing on every replica (the sync only moves idle clocks forward —
    it never rewinds, and it never touches model state, so tokens are
    unaffected).
-3. **Steal** — if an engine holds preempted requests it cannot resume
-   (batch full, or no pool headroom) while another engine has spare
-   batch slots *and* enough free pages, the best resume candidate
-   (priority, then slack) migrates: the source engine exports its pure
-   host-side bundle (Request + decode state + saved token count), the
-   shared tier re-leases the request's host frames to the destination
-   domain (whole-frame owner flips when exclusive — zero copies), and
-   the destination imports it into its resume queue.  The request then
-   faults in through the destination's own DMA lanes and continues
-   decoding — **no re-prefill, no device-to-device copy**, only
-   host-resident base pages changing hands: the paper's "no costly base
-   page migration", lifted to the cluster.
+3. **Steal (preempted)** — if an engine holds preempted requests it
+   cannot resume (batch full, or no pool headroom) while another engine
+   has spare batch slots *and* enough free pages, the best resume
+   candidate (priority, then slack) migrates: the source engine exports
+   its pure host-side bundle (Request + decode state + saved token
+   count), the shared tier re-leases the request's host frames to the
+   destination domain (whole-frame owner flips when exclusive — zero
+   copies), and the destination imports it into its resume queue.  The
+   request then faults in through the destination's own DMA lanes and
+   continues decoding — **no re-prefill, no device-to-device copy**.
+4. **Steal (queued)** — a *queued, never-admitted* request is pure
+   router state (no device KV, no host leases), so re-dispatching it is
+   free.  At most one moves per step, under a deterministic rule
+   (DESIGN.md §14): the cheapest engine takes the most urgent
+   non-pinned queued request of the costliest engine, and only when the
+   source stays strictly costlier than the destination *plus* the
+   request's own cost — the hysteresis that makes ping-pong impossible.
+
+**Proactive pre-staging** (DESIGN.md §14, opt-in via ``prestage=True``):
+the moment dispatch (or a queued steal) picks a target engine, the
+request's prefix-index hits and resume pages start faulting toward that
+engine's staging buffers over the ordinary prefetch DMA "in" lanes —
+admission later finds the transfers staged or in flight and skips
+issuing them again.  A steal or crash that retargets the request
+cancels its pre-stage with a lane-time refund for the un-elapsed
+transfer remainder.  Pre-staging only moves *when* bytes arrive, never
+what decode computes: tokens are byte-identical with it on or off.
 
 Migration requires the shared host tier (without it the payload bytes
 live in the source engine's private store); the router degrades to
@@ -58,17 +79,31 @@ class RouterStats:
     crashes: int = 0
     recovered_bundles: int = 0
     recovered_requeued: int = 0
+    # Queued-work re-dispatch + proactive pre-staging (DESIGN.md §14).
+    queued_steals: int = 0
+    prestaged_requests: int = 0
+    prestage_cancels: int = 0
+    prestage_refund_us: float = 0.0
 
 
 class RequestRouter:
     def __init__(self, engines: List[ServingEngine], *, tier=None,
                  policy: str = "slack", migrate: bool = True,
-                 injector=None) -> None:
+                 injector=None, cost_model: str = "modeled",
+                 prestage: bool = False,
+                 steal_queued: bool = True) -> None:
         assert policy in ("slack", "fifo"), policy
+        assert cost_model in ("modeled", "tokens"), cost_model
         assert engines
         self.engines = engines
         self.tier = tier
         self.policy = policy
+        self.cost_model = cost_model
+        # Proactive pre-staging of queued requests (DESIGN.md §14).
+        self.prestage = prestage
+        # Queued-steal is gated separately from preempted-steal: a queued
+        # request carries no host-side state, so it needs no tier.
+        self.steal_queued = steal_queued
         # Work stealing needs the shared tier: the bundle is host-side
         # state, and the payload bytes must be visible to the thief.
         self.migrate = migrate and tier is not None
@@ -80,6 +115,15 @@ class RequestRouter:
         self._arrival = itertools.count()
         self._rr = 0                                    # fifo round-robin
         self._owner: Dict[int, int] = {}                # rid → engine idx
+        # rid → engine idx its pre-stage targets.  Invariant: an entry
+        # exists only while the request sits in that engine's queue —
+        # pruned after each step, cancelled on steal/crash retarget —
+        # so a crash can never double-cancel (or double-stage) a rid.
+        self._prestaged: Dict[int, int] = {}
+        # Explicitly placed rids (submit(engine=...)): benches pin these
+        # to construct controlled scenarios — queued-steal respects that
+        # and never re-dispatches them.
+        self._pinned: set = set()
         self.stats = RouterStats()
 
     def _live(self) -> List[ServingEngine]:
@@ -95,6 +139,7 @@ class RequestRouter:
             f"rid {req.rid} already routed (cluster rids must be unique)"
         self.stats.submitted += 1
         if engine is not None:
+            self._pinned.add(req.rid)
             self._assign(req, engine)
         else:
             self.pending.append((next(self._arrival), req))
@@ -103,6 +148,43 @@ class RequestRouter:
         self._owner[req.rid] = idx
         self.engines[idx].submit(req)
         self.stats.dispatched[idx] = self.stats.dispatched.get(idx, 0) + 1
+        self._prestage_to(req, idx)
+
+    # --------------------------------------------------------- pre-staging
+
+    def _prestage_to(self, req: Request, idx: int) -> None:
+        """Start faulting ``req``'s reusable pages toward engine ``idx``
+        (DESIGN.md §14).  Exactly-once discipline: any stale pre-stage
+        at another engine is cancelled first, and the tracking entry is
+        recorded only when pages were actually issued."""
+        if not self.prestage:
+            return
+        if self._prestaged.get(req.rid, idx) != idx:
+            self._cancel_prestage(req.rid)
+        staged = self.engines[idx].prestage_queued(req)
+        if staged:
+            self._prestaged[req.rid] = idx
+            self.stats.prestaged_requests += 1
+
+    def _cancel_prestage(self, rid: int) -> None:
+        """Cancel ``rid``'s pre-stage at whichever engine holds it (a
+        steal or crash retargeted the request).  The un-elapsed lane
+        time refunded by the DMA engine is accounted cluster-side."""
+        idx = self._prestaged.pop(rid, None)
+        if idx is None:
+            return
+        refund = self.engines[idx].cancel_prestage(rid)
+        self.stats.prestage_cancels += 1
+        self.stats.prestage_refund_us += refund
+
+    def _prune_prestaged(self) -> None:
+        """Drop tracking entries whose request left the target engine's
+        queue (admitted, or retired) — the engine-side accounting took
+        over at admission.  Keeping them would make a later crash
+        "cancel" staged payloads an admission already dedup'd against."""
+        for rid, idx in list(self._prestaged.items()):
+            if all(r.rid != rid for r in self.engines[idx].queue):
+                del self._prestaged[rid]
 
     # ------------------------------------------------------------- dispatch
 
@@ -110,8 +192,12 @@ class RequestRouter:
     def engine_load(eng: ServingEngine) -> int:
         """Outstanding-work estimate in page-ish units: remaining decode
         tokens of admitted/preempted requests plus prompt pages + decode
-        tokens of the still-queued.  Deterministic and cheap — the
-        router only needs a consistent ordering, not a perf model."""
+        tokens of the still-queued.  The PR 4 heuristic, kept as the
+        ``cost_model="tokens"`` A/B baseline: cheap and consistent, but
+        blind to the *rate* at which each unit retires — a decode token
+        costs a whole batched window while a prompt token costs only
+        ``prefill_us_per_token``, so token counts misroute whenever the
+        mix is heterogeneous (the ``router`` bench scenario)."""
         ptok = max(eng.geo.page_tokens, 1)
         load = 0
         for r in list(eng.active) + list(eng.preempted):
@@ -120,11 +206,87 @@ class RequestRouter:
             load += len(r.prompt) // ptok + max(r.max_new - len(r.out), 1)
         return load
 
+    def engine_cost_us(self, eng: ServingEngine) -> float:
+        """Modeled µs until ``eng`` would drain the work it already owns
+        (DESIGN.md §14) — the dispatch cost a newcomer queues behind.
+
+        Terms, all from state the engine/tier already track:
+
+        * **link lanes** — DMA backlog beyond the engine's clock
+          (``dma.busy_until()``): transfers a new admission's fault-ins
+          queue behind;
+        * **decode backlog** — remaining new tokens across active /
+          preempted / held / queued requests.  Window count is the max
+          of the throughput bound (total remaining / ``max_batch``) and
+          the critical path (largest single request's remaining tokens,
+          since a request retires at most one token per window);
+        * prefill carries **no term**: on the modeled clock admission
+          compute is wall work hidden inside the decode window, so
+          queued prompt pages are free — exactly the heterogeneity the
+          token-count baseline overweights (its misroute the ``router``
+          bench demonstrates);
+        * **disk lanes** — each preempted/held request whose saved pages
+          spilled owes one seek + per-page disk reads before it can
+          resume;
+        * **host lanes** — the shared tier's write-back DMA backlog
+          (identical for every engine, but it keeps absolute costs
+          honest for hysteresis thresholds).
+
+        Monotone by construction: adding a request, a DMA booking, or a
+        spilled page can only raise the cost.  The sim-side mirror is
+        :meth:`repro.core.tlb_sim.Link.engine_occupancy`.
+        """
+        now = eng._clock_us
+        window = (eng.decode_window_us
+                  if eng.decode_window_us is not None else 1000.0)
+        cost = max(0.0, eng.dma.busy_until() - now)
+        remaining = 0
+        longest = 0
+        for r in (list(eng.active) + list(eng.preempted)
+                  + list(eng._held) + list(eng.queue)):
+            rem = max(r.max_new - len(r.out), 1)
+            remaining += rem
+            longest = max(longest, rem)
+        if remaining:
+            cost += window * max(-(-remaining // max(eng.max_batch, 1)),
+                                 longest)
+        if self.tier is not None:
+            for r in list(eng.preempted) + list(eng._held):
+                spilled = self.tier.spilled_keys_of(r.rid)
+                if spilled:
+                    cost += (self.tier.disk_seek_us + len(spilled)
+                             * self.tier.disk_read_us_per_page)
+            wb = getattr(self.tier, "wb_dma", None)
+            if wb is not None:
+                cost += max(0.0, wb.busy_until() - now)
+        return cost
+
+    def _load(self, eng: ServingEngine) -> float:
+        """The active cost model's load figure for ``eng``."""
+        if self.cost_model == "tokens":
+            return float(self.engine_load(eng))
+        return self.engine_cost_us(eng)
+
+    def _request_cost(self, r: Request, eng: ServingEngine) -> float:
+        """What ``r`` itself would add to ``eng``'s load figure — the
+        queued-steal hysteresis margin, in the active model's units."""
+        rem = max(r.max_new - len(r.out), 1)
+        if self.cost_model == "tokens":
+            ptok = max(eng.geo.page_tokens, 1)
+            return float(len(r.prompt) // ptok + rem)
+        window = (eng.decode_window_us
+                  if eng.decode_window_us is not None else 1000.0)
+        return window * (-(-rem // max(eng.max_batch, 1)))
+
     def _rank(self, item: Tuple[int, Request]):
         arrival, r = item
         deadline = r.deadline_us if r.deadline_us is not None \
             else float("inf")
-        return (-r.priority, deadline, arrival)
+        # rid (not arrival) breaks equal-slack ties: submission-order
+        # shuffles of equivalent requests must not change the dispatch
+        # (the §14 determinism property) — arrival stays as the final
+        # tiebreak for the degenerate duplicate-rid case.
+        return (-r.priority, deadline, r.rid, arrival)
 
     def dispatch(self) -> None:
         if not self.pending:
@@ -135,8 +297,7 @@ class RequestRouter:
             order = sorted(self.pending, key=self._rank)
             for _, req in order:
                 idx = min(live,
-                          key=lambda i: (self.engine_load(self.engines[i]),
-                                         i))
+                          key=lambda i: (self._load(self.engines[i]), i))
                 self._assign(req, idx)
         else:                           # fifo: arrival order, round-robin
             for _, req in sorted(self.pending):
@@ -169,8 +330,11 @@ class RequestRouter:
         now = max(e._clock_us for e in live)
         for e in live:
             e._clock_us = max(e._clock_us, now)
+        self._prune_prestaged()
         if self.migrate:
             self._steal()
+        if self.steal_queued:
+            self._steal_queued()
         return progressed or bool(self.pending)
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
@@ -216,6 +380,13 @@ class RequestRouter:
         * **In-flight and queued requests** lose their device KV:
           they re-dispatch from the prompt (cleared outputs) — the
           deterministic decoder replays the same tokens.
+        * **Pre-staged queued requests** (DESIGN.md §14): the pre-stage
+          died with the victim's staging buffers.  The tracking entry is
+          dropped *before* the requeue — with the victim-side pages
+          written off as cancelled, never refunded into live lanes — so
+          each such request re-enters ``pending`` exactly once and
+          pre-stages afresh at whichever survivor dispatch picks (no
+          double-charge of DMA lane time, no double dispatch).
         * The dead domain's remaining host frames are reclaimed whole
           (:meth:`SharedHostTier.reclaim_domain`); prefix-domain frames
           belong to a different domain by construction and survive.
@@ -230,13 +401,21 @@ class RequestRouter:
             raise RuntimeError(
                 f"engine {victim.engine_id} crashed with no survivor — "
                 f"the cluster cannot recover")
+        # Write off pre-stages targeting the victim: its lanes are dead,
+        # so the "refund" is bookkeeping only (counted on the victim,
+        # not credited to any live lane) — the rid's entry must be gone
+        # before the requeue below re-dispatches it.
+        for rid, pidx in list(self._prestaged.items()):
+            if pidx == idx:
+                del self._prestaged[rid]
+                victim.cancel_prestage(rid)
+                self.stats.prestage_cancels += 1
         victim.preempted.extend(victim._held)
         victim._held.clear()
         if self.tier is not None:
             for r in list(victim.preempted):
                 bundle = victim.export_preempted(r.rid)
-                dst = min(live, key=lambda e: (self.engine_load(e),
-                                               e.engine_id))
+                dst = min(live, key=lambda e: (self._load(e), e.engine_id))
                 self.tier.migrate_seq(r.rid, dst.engine_id)
                 dst.import_preempted(bundle)
                 self._owner[r.rid] = self.engines.index(dst)
@@ -281,10 +460,10 @@ class RequestRouter:
         deterministic and easy to reason about; pressure that persists
         steals again next step)."""
         dsts = sorted(self._live(),
-                      key=lambda e: (self.engine_load(e), e.engine_id))
+                      key=lambda e: (self._load(e), e.engine_id))
         for dst in dsts:
             for src in sorted(self._live(),
-                              key=lambda e: (-self.engine_load(e),
+                              key=lambda e: (-self._load(e),
                                              e.engine_id)):
                 if src is dst or not src.preempted:
                     continue
@@ -298,6 +477,46 @@ class RequestRouter:
                     self._migrate(cand.rid, src, dst)
                     self.stats.steal_rounds += 1
                     return
+
+    def _steal_queued(self) -> None:
+        """Re-dispatch at most one *queued, never-admitted* request per
+        step (DESIGN.md §14).  Deterministic rule: the cheapest live
+        engine takes the most urgent non-pinned queued request — rank
+        ``(-priority, deadline, rid)``, rid breaking ties — of the
+        costliest engine, and only when the source remains strictly
+        costlier than the destination plus the request's own cost
+        (hysteresis: a moved request can never bounce straight back).
+        The request's pre-stage, if any, is cancelled at the source
+        (lane-time refund) and restarted at the thief."""
+        live = self._live()
+        if len(live) < 2:
+            return
+        dst = min(live, key=lambda e: (self._load(e), e.engine_id))
+        for src in sorted(live, key=lambda e: (-self._load(e),
+                                               e.engine_id)):
+            if src is dst:
+                continue
+            cands = [r for r in src.queue if r.rid not in self._pinned]
+            if not cands:
+                continue
+            cand = min(cands, key=lambda r: (
+                -r.priority,
+                r.deadline_us if r.deadline_us is not None
+                else float("inf"),
+                r.rid))
+            if self._load(src) <= self._load(dst) \
+                    + self._request_cost(cand, dst):
+                continue
+            src.queue.remove(cand)
+            self._cancel_prestage(cand.rid)
+            dst_idx = self.engines.index(dst)
+            self._owner[cand.rid] = dst_idx
+            dst.submit(cand)
+            self.stats.queued_steals += 1
+            self.stats.dispatched[dst_idx] = \
+                self.stats.dispatched.get(dst_idx, 0) + 1
+            self._prestage_to(cand, dst_idx)
+            return
 
     def _migrate(self, rid: int, src: ServingEngine,
                  dst: ServingEngine) -> None:

@@ -7,6 +7,8 @@ deadline accounting, work-stealing migration (zero re-prefill, token
 identity across engine counts), and the MoE/MLA park fallback.
 """
 
+import os
+
 import numpy as np
 import pytest
 
@@ -616,3 +618,75 @@ def test_recycled_frame_does_not_inherit_heat():
 def test_victim_scoring_flag_validated():
     with pytest.raises(ValueError, match="victim_scoring"):
         HostFrameTable(frame_pages=2, victim_scoring="mru")
+
+
+# --------------------------------- cross-feature stress (§11/§12/§14)
+
+
+@pytest.mark.router
+@pytest.mark.faults
+def test_cluster_crashes_spill_steal_prestage_randomized():
+    """Property test (seeded via ROUTER_TEST_SEED): a randomized
+    schedule mixing engine crashes (FaultPlan), spill back-pressure
+    under a tight frame cap, queued-steal, and pre-staging drains
+    completely with no leaked host-frame leases and no orphaned
+    staging slots or pre-stage entries on the survivors."""
+    from repro.serving.faults import FaultInjector, FaultPlan
+
+    seed = int(os.environ.get("ROUTER_TEST_SEED", "0"))
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke_config("qwen2.5-3b")
+    dead = (0, 2)
+    inj = FaultInjector(FaultPlan(seed=seed,
+                                  engine_crashes=((4, dead[0]),
+                                                  (9, dead[1]))))
+    cluster = ServingCluster(cfg, geometry=GEO, n_engines=3, max_batch=2,
+                             max_seq=128, seed=0, capacity_frames=4,
+                             spill=True, wb_queue_frames=2,
+                             router_prestage=True,
+                             decode_window_us=1000.0,
+                             fault_injector=inj)
+    shared = [rng.integers(0, cfg.vocab_size,
+                           PTOK * int(rng.integers(3, 6))).astype(np.int32)
+              for _ in range(2)]
+    reqs, rid = [], 0
+    for _ in range(12):
+        for _ in range(int(rng.integers(0, 3))):
+            if rng.random() < 0.6:          # shared-prefix request
+                base = shared[int(rng.integers(0, 2))]
+                prompt = np.concatenate([base, rng.integers(
+                    0, cfg.vocab_size,
+                    int(rng.integers(8, 25))).astype(np.int32)])
+            else:                           # cold request
+                prompt = rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(8, 49))
+                                      ).astype(np.int32)
+            req = Request(
+                rid=rid, tenant=rid % 3,
+                priority=int(rng.integers(0, 3)), prompt=prompt,
+                max_new=int(rng.integers(2, 9)),
+                deadline_us=(None if rng.random() < 0.5 else
+                             float(rng.integers(5_000, 40_000))))
+            reqs.append(req)
+            cluster.submit(req)
+            rid += 1
+        cluster.step()
+    cluster.run_until_drained(max_steps=3000)
+    assert all(r.done for r in reqs), \
+        [r.rid for r in reqs if not r.done]
+    cluster.check_invariants()
+    tier = cluster.tier
+    # Crashed domains were reclaimed whole: no lease survives them.
+    leaked = [k for k in tier.frames._key_frame
+              if tier.frames.owner_of(k) in dead]
+    assert not leaked, leaked
+    # Survivors hold no orphaned staging slots or pre-stage entries.
+    for e in cluster.engines:
+        if e.alive:
+            assert len(e.staging) == 0, (e.engine_id, len(e.staging))
+            assert not e._prestage_keys
+            assert not e.prefetch.in_flight
+    # The schedule actually exercised every feature under test.
+    assert cluster.router.stats.crashes == 2
+    assert cluster.router.stats.prestaged_requests > 0
+    assert tier.stats["spilled_frames"] > 0

@@ -1,0 +1,557 @@
+"""Modeled-cost routing, queued steal, and proactive pre-staging tests
+(DESIGN.md §14).
+
+Randomized cases are seeded through ``ROUTER_TEST_SEED`` (CI runs seeds
+0/1/2): for a fixed seed every test is deterministic.  Covers the cost
+model's monotonicity and its divergence from the token-count heuristic,
+dispatch determinism under arrival-order shuffles, DMA job cancellation
+with lane-time refunds, the read-only prefix probe, pre-stage
+lifecycle accounting (hit / wasted / cancelled), queued-steal rules
+(pinned requests, hysteresis), the crash → exactly-once re-dispatch
+regression, and the sim-side ``Link.engine_occupancy`` mirror.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PoolGeometry
+from repro.core.tlb_sim import Link, SimConfig
+from repro.serving.cluster import ServingCluster
+from repro.serving.dma import AsyncDMAEngine
+from repro.serving.engine import Request
+from repro.serving.router import RequestRouter
+
+pytestmark = pytest.mark.router
+
+SEED = int(os.environ.get("ROUTER_TEST_SEED", "0"))
+GEO = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
+CFG = get_smoke_config("qwen2.5-3b")
+PTOK = GEO.page_tokens
+
+
+def _rng(k: int = 0):
+    return np.random.default_rng(SEED * 1000 + k)
+
+
+def _prompt(rng, n: int):
+    return rng.integers(0, CFG.vocab_size, n).astype(np.int32)
+
+
+def _cluster(n_engines: int = 1, **kw) -> ServingCluster:
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 128)
+    kw.setdefault("seed", 0)
+    kw.setdefault("migrate", False)
+    kw.setdefault("decode_window_us", 1000.0)
+    return ServingCluster(CFG, geometry=GEO, n_engines=n_engines, **kw)
+
+
+def _warm_prefix(cluster, shared, *, rid=0, engine=0):
+    """Park ``shared`` into the prefix index by running one request."""
+    rng = _rng(99)
+    req = Request(rid=rid, tenant=0,
+                  prompt=np.concatenate([shared, _prompt(rng, PTOK)]),
+                  max_new=2)
+    cluster.submit(req, engine=engine)
+    cluster.run_until_drained(max_steps=300)
+    return req
+
+
+def _payload():
+    return (np.zeros((1, PTOK, 1, 4), np.float32),
+            np.zeros((1, PTOK, 1, 4), np.float32))
+
+
+def _enqueue(dma, n_pages, now_us, seq=1):
+    keys = [(seq, 0, i) for i in range(n_pages)]
+    return dma.enqueue(keys, list(range(n_pages)), 4096,
+                       [_payload()] * n_pages, now_us)
+
+
+# ------------------------------------------------------------ cost model
+
+
+def test_invalid_cost_model_rejected():
+    cluster = _cluster(1)
+    with pytest.raises(AssertionError):
+        RequestRouter(cluster.engines, cost_model="bogus")
+
+
+def test_cost_monotone_in_queued_load():
+    """Adding queued requests never lowers the modeled cost (seeded)."""
+    cluster = _cluster(1)
+    router, eng = cluster.router, cluster.engines[0]
+    rng = _rng(1)
+    prev = router.engine_cost_us(eng)
+    assert prev == 0.0
+    for i in range(8):
+        cluster.submit(Request(
+            rid=i, tenant=0, prompt=_prompt(rng, int(rng.integers(8, 64))),
+            max_new=int(rng.integers(1, 12))), engine=0)
+        cost = router.engine_cost_us(eng)
+        assert cost >= prev
+        prev = cost
+    assert prev > 0.0
+
+
+def test_cost_monotone_in_dma_backlog():
+    cluster = _cluster(1)
+    router, eng = cluster.router, cluster.engines[0]
+    rng = _rng(2)
+    c0 = router.engine_cost_us(eng)
+    job = _enqueue(eng.dma, int(rng.integers(2, 8)), eng._clock_us)
+    c1 = router.engine_cost_us(eng)
+    assert c1 - c0 == pytest.approx(job.transfer_us)
+    _enqueue(eng.dma, int(rng.integers(2, 8)), eng._clock_us, seq=2)
+    assert router.engine_cost_us(eng) >= c1
+
+
+def test_cost_includes_writeback_backlog():
+    cluster = _cluster(1, capacity_frames=8, spill=True)
+    router, eng = cluster.router, cluster.engines[0]
+    c0 = router.engine_cost_us(eng)
+    cluster.tier.wb_dma.channel_free["out"][0] = eng._clock_us + 777.0
+    assert router.engine_cost_us(eng) - c0 == pytest.approx(777.0)
+
+
+def test_cost_monotone_in_spilled_resume_debt():
+    """A preempted request whose saved pages spilled owes disk time."""
+    cluster = _cluster(1, capacity_frames=2, spill=True)
+    router, eng, tier = cluster.router, cluster.engines[0], cluster.tier
+    view = tier.view(0)
+    for vpn in range(8):                    # rid 5: two full frames
+        view.put(5, 0, vpn, *_payload())
+    for vpn in range(8):                    # rid 6 pushes rid 5 to disk
+        view.put(6, 0, vpn, *_payload())
+    tier.flush()
+    assert tier.spilled_keys_of(5)
+    c0 = router.engine_cost_us(eng)
+    rng = _rng(3)
+    eng.preempted.append(Request(rid=5, tenant=0,
+                                 prompt=_prompt(rng, 8), max_new=4))
+    c1 = router.engine_cost_us(eng)
+    n_spilled = len(tier.spilled_keys_of(5))
+    assert c1 - c0 >= tier.disk_seek_us \
+        + n_spilled * tier.disk_read_us_per_page
+    eng.preempted.append(Request(rid=6, tenant=0,
+                                 prompt=_prompt(rng, 8), max_new=6))
+    assert router.engine_cost_us(eng) > c1
+
+
+def test_modeled_cost_diverges_from_token_count():
+    """The misroute scenario: one long decode is cheap in token units
+    but expensive in modeled µs (critical path); many prompt-heavy
+    two-token requests are the reverse."""
+    cluster = _cluster(2)
+    router = cluster.router
+    rng = _rng(4)
+    e_long, e_wide = cluster.engines
+    cluster.submit(Request(rid=0, tenant=0, prompt=_prompt(rng, 16),
+                           max_new=20), engine=0)
+    for i in range(8):
+        cluster.submit(Request(rid=1 + i, tenant=0,
+                               prompt=_prompt(rng, 24), max_new=2),
+                       engine=1)
+    assert router.engine_load(e_long) < router.engine_load(e_wide)
+    assert router.engine_cost_us(e_long) > router.engine_cost_us(e_wide)
+
+
+def test_request_cost_units_match_model():
+    cluster = _cluster(1)
+    router, eng = cluster.router, cluster.engines[0]
+    rng = _rng(5)
+    r = Request(rid=9, tenant=0, prompt=_prompt(rng, 24), max_new=5)
+    assert router._request_cost(r, eng) \
+        == pytest.approx(1000.0 * -(-5 // eng.max_batch))
+    router.cost_model = "tokens"
+    assert router._request_cost(r, eng) == pytest.approx(24 // PTOK + 5)
+    router.cost_model = "modeled"
+
+
+# ---------------------------------------------------------- determinism
+
+
+def test_dispatch_deterministic_under_arrival_shuffles():
+    """Equal-slack requests land on the same engines regardless of the
+    order they were submitted in (seeded shuffles)."""
+    rng = _rng(6)
+    prompts = [_prompt(rng, int(rng.integers(8, 40))) for _ in range(6)]
+    owners = []
+    for trial in range(3):
+        order = list(range(6))
+        if trial:
+            rng.shuffle(order)
+        cluster = _cluster(2)
+        for i in order:
+            cluster.submit(Request(rid=i, tenant=0, prompt=prompts[i],
+                                   max_new=4, deadline_us=9000.0))
+        cluster.router.dispatch()
+        owners.append(dict(cluster.router._owner))
+    assert owners[0] == owners[1] == owners[2]
+
+
+def test_rank_breaks_equal_slack_ties_by_rid():
+    cluster = _cluster(1)
+    rng = _rng(7)
+    reqs = [Request(rid=i, tenant=0, prompt=_prompt(rng, 8), max_new=2,
+                    deadline_us=5000.0) for i in range(5)]
+    perm = list(range(5))
+    rng.shuffle(perm)
+    shuffled = [(arrival, reqs[i]) for arrival, i in enumerate(perm)]
+    order = [r.rid for _, r in sorted(shuffled, key=cluster.router._rank)]
+    assert order == [0, 1, 2, 3, 4]
+
+
+# --------------------------------------------------------- DMA cancel
+
+
+def test_dma_cancel_midflight_refunds_remainder():
+    dma = AsyncDMAEngine(n_channels=1)
+    job = _enqueue(dma, 4, 0.0)
+    T = job.transfer_us
+    refund = dma.cancel(job, T / 2)
+    assert refund == pytest.approx(T / 2)
+    assert dma.channel_free["in"][0] == pytest.approx(T / 2)
+    assert dma.stats["hidden_us"] == pytest.approx(T / 2)
+    assert dma.stats["transfer_us"] == pytest.approx(T / 2)
+    assert dma.stats["refunded_us"] == pytest.approx(T / 2)
+    assert dma.stats["cancelled_jobs"] == 1
+    assert job.settled and job.job_id not in dma.in_flight
+
+
+def test_dma_cancel_with_job_queued_behind_refunds_nothing():
+    """Cancelling a job another transfer already queued behind cannot
+    reclaim the lane time — the elapsed transfer is written off as
+    hidden and the channel timeline is untouched."""
+    dma = AsyncDMAEngine(n_channels=1)
+    j1 = _enqueue(dma, 4, 0.0)
+    j2 = _enqueue(dma, 2, 0.0, seq=2)
+    free_before = dma.channel_free["in"][0]
+    assert free_before == pytest.approx(j2.done_us)
+    refund = dma.cancel(j1, 10.0)
+    assert refund == 0.0
+    assert dma.stats["refunded_us"] == 0.0
+    assert dma.stats["hidden_us"] == pytest.approx(j1.transfer_us)
+    assert dma.channel_free["in"][0] == pytest.approx(free_before)
+    assert j2.job_id in dma.in_flight
+
+
+def test_dma_cancel_settled_job_is_noop():
+    dma = AsyncDMAEngine(n_channels=1)
+    job = _enqueue(dma, 3, 0.0)
+    dma.wait(job, 0.0)
+    before = dict(dma.stats)
+    assert dma.cancel(job, job.done_us) == 0.0
+    assert dma.stats == before
+
+
+def test_dma_cancel_preserves_direction_invariant():
+    """hidden + exposed == Σ transfer_us (post-refund) over any seeded
+    mix of waited and cancelled jobs."""
+    rng = _rng(8)
+    dma = AsyncDMAEngine(n_channels=2)
+    now = 0.0
+    for i in range(12):
+        job = _enqueue(dma, int(rng.integers(1, 6)), now, seq=i)
+        if rng.random() < 0.5:
+            now = dma.wait(job, now)
+        else:
+            dma.cancel(job, now + float(rng.uniform(0, job.transfer_us)))
+        now += float(rng.uniform(0, 50))
+    assert dma.stats["hidden_us"] + dma.stats["exposed_us"] \
+        == pytest.approx(dma.stats["transfer_us"])
+
+
+# ----------------------------------------------------- read-only probe
+
+
+def test_peek_match_is_readonly_and_agrees_with_match():
+    cluster = _cluster(1)
+    rng = _rng(9)
+    shared = _prompt(rng, 5 * PTOK)
+    _warm_prefix(cluster, shared)
+    idx = cluster.engines[0].prefix
+    probe = np.concatenate([shared, _prompt(rng, PTOK)])
+    tick0, stats0 = idx._tick, dict(idx.stats)
+    pages0 = {h: (p.tick, p.hits) for h, p in idx._pages.items()}
+    n_peek, peeked = idx.peek_match(probe)
+    assert idx._tick == tick0 and dict(idx.stats) == stats0
+    assert {h: (p.tick, p.hits) for h, p in idx._pages.items()} == pages0
+    n_match, matched = idx.match(probe)
+    assert n_peek == n_match > 0
+    assert [(p.owner, p.shard, p.vpn) for p in peeked] \
+        == [(p.owner, p.shard, p.vpn) for p in matched]
+    assert idx.stats["lookups"] == stats0["lookups"] + 1
+
+
+# -------------------------------------------------------- pre-staging
+
+
+def test_prestage_queued_stages_prefix_pages():
+    cluster = _cluster(1)
+    rng = _rng(10)
+    shared = _prompt(rng, 5 * PTOK)
+    _warm_prefix(cluster, shared)
+    eng = cluster.engines[0]
+    req = Request(rid=7, tenant=0,
+                  prompt=np.concatenate([shared, _prompt(rng, PTOK)]),
+                  max_new=2)
+    n = eng.prestage_queued(req)
+    assert n == 5
+    assert len(eng._prestage_keys) == 5
+    assert all(k[0] == 7 for k in eng._prestage_keys)
+    assert all(owner < 0 for owner in eng._prestage_keys.values())
+    assert all(k in eng.prefetch.in_flight for k in eng._prestage_keys)
+    assert eng.stats.prestaged_pages == 5
+    # Re-probing while the transfer is in flight issues nothing new.
+    assert eng.prestage_queued(req) == 0
+
+
+def test_cancel_prestage_refunds_and_clears():
+    cluster = _cluster(1)
+    rng = _rng(11)
+    shared = _prompt(rng, 5 * PTOK)
+    _warm_prefix(cluster, shared)
+    eng = cluster.engines[0]
+    req = Request(rid=7, tenant=0,
+                  prompt=np.concatenate([shared, _prompt(rng, PTOK)]),
+                  max_new=2)
+    eng.prestage_queued(req)
+    transfer_before = eng.stats.transfer_us
+    refund = eng.cancel_prestage(7)
+    assert refund > 0.0
+    assert eng.stats.prestage_cancelled == 5
+    assert eng.stats.prestage_refund_us == pytest.approx(refund)
+    assert eng.stats.transfer_us \
+        == pytest.approx(transfer_before - refund)
+    assert not eng._prestage_keys and not eng.prefetch.in_flight
+    assert eng.dma.stats["cancelled_jobs"] == 1
+    assert eng.cancel_prestage(7) == 0.0    # idempotent
+
+
+def test_prestage_waste_counter_and_summary():
+    cluster = _cluster(1)
+    rng = _rng(12)
+    shared = _prompt(rng, 5 * PTOK)
+    _warm_prefix(cluster, shared)
+    eng = cluster.engines[0]
+    req = Request(rid=7, tenant=0,
+                  prompt=np.concatenate([shared, _prompt(rng, PTOK)]),
+                  max_new=2)
+    eng.prestage_queued(req)
+    eng._note_prestage_waste(7)
+    assert eng.stats.prestage_wasted == 5
+    assert not eng._prestage_keys
+    assert "prestage 5 pages (0/5/0 hit/wasted/cancelled)" \
+        in eng.stats.summary()
+
+
+def test_prestage_tokens_identical_and_hits():
+    """Pre-staging changes when bytes arrive, never what decode
+    computes: byte-identical tokens, with staged pages counted as hits
+    at admission."""
+    rng = _rng(13)
+    shared = _prompt(rng, 5 * PTOK)
+    suffixes = [_prompt(rng, PTOK * (1 + i % 2)) for i in range(3)]
+    cold = _prompt(rng, 24)
+    outs = {}
+    for prestage in (False, True):
+        cluster = _cluster(1, router_prestage=prestage)
+        _warm_prefix(cluster, shared)
+        reqs = [Request(rid=10 + i, tenant=0,
+                        prompt=np.concatenate([shared, suf]), max_new=4)
+                for i, suf in enumerate(suffixes)]
+        reqs.append(Request(rid=20, tenant=0, prompt=cold, max_new=4))
+        for r in reqs:
+            cluster.submit(r)
+        cluster.run_until_drained(max_steps=500)
+        assert all(r.done for r in reqs)
+        cluster.check_invariants()
+        outs[prestage] = {r.rid: tuple(r.out) for r in reqs}
+        if prestage:
+            assert cluster.router.stats.prestaged_requests >= 1
+            assert cluster.engines[0].stats.prestage_hits > 0
+    assert outs[False] == outs[True]
+
+
+def test_prestage_then_steal_matches_cold_dispatch():
+    """A request pre-staged at one engine and then queue-stolen to
+    another produces byte-identical tokens to dispatching it cold at
+    the thief, and the source's pre-stage is cancelled with a refund."""
+    rng = _rng(14)
+    shared = _prompt(rng, 5 * PTOK)
+    heavy_prompts = [_prompt(rng, 16) for _ in range(2)]
+    r_prompt = np.concatenate([shared, _prompt(rng, PTOK)])
+
+    def heavies(cluster):
+        hs = [Request(rid=1 + i, tenant=0, prompt=p, max_new=8)
+              for i, p in enumerate(heavy_prompts)]
+        for h in hs:
+            cluster.submit(h, engine=0)
+        return hs
+
+    # Stolen path: pre-stage toward busy engine 0, steal to idle 1.
+    cluster = _cluster(2, router_prestage=True)
+    _warm_prefix(cluster, shared)
+    hs = heavies(cluster)
+    cluster.step()                          # heavies become active on e0
+    router = cluster.router
+    r = Request(rid=50, tenant=1, prompt=r_prompt.copy(), max_new=4)
+    router._owner[r.rid] = 0                # white-box: queue r at the
+    cluster.engines[0].submit(r)            # busy engine, pre-staged
+    router.stats.dispatched[0] = router.stats.dispatched.get(0, 0) + 1
+    router._prestage_to(r, 0)
+    assert router._prestaged[r.rid] == 0
+    assert cluster.engines[0]._prestage_keys
+    router._steal_queued()
+    assert router.stats.queued_steals == 1
+    assert router._owner[r.rid] == 1
+    assert r in cluster.engines[1].queue
+    assert cluster.engines[0].stats.prestage_cancelled > 0
+    assert router.stats.prestage_cancels == 1
+    assert not cluster.engines[0]._prestage_keys
+    cluster.run_until_drained(max_steps=500)
+    assert r.done and all(h.done for h in hs)
+    cluster.check_invariants()
+
+    # Cold reference: same requests, r dispatched straight to engine 1
+    # with pre-staging off.
+    cold = _cluster(2, router_prestage=False)
+    _warm_prefix(cold, shared)
+    hs2 = heavies(cold)
+    cold.step()
+    r2 = Request(rid=50, tenant=1, prompt=r_prompt.copy(), max_new=4)
+    cold.submit(r2, engine=1)
+    cold.run_until_drained(max_steps=500)
+    assert r2.done and all(h.done for h in hs2)
+    assert tuple(r.out) == tuple(r2.out)
+    for h, h2 in zip(hs, hs2):
+        assert tuple(h.out) == tuple(h2.out)
+
+
+# -------------------------------------------------------- queued steal
+
+
+def test_queued_steal_skips_pinned_requests():
+    cluster = _cluster(2)
+    rng = _rng(15)
+    router = cluster.router
+    for i in range(2):
+        cluster.submit(Request(rid=1 + i, tenant=0,
+                               prompt=_prompt(rng, 16), max_new=10),
+                       engine=0)
+    cluster.step()                          # both active on engine 0
+    r_pin = Request(rid=40, tenant=0, prompt=_prompt(rng, 16), max_new=4)
+    cluster.submit(r_pin, engine=0)         # pinned: never stolen
+    r_free = Request(rid=41, tenant=0, prompt=_prompt(rng, 16), max_new=4)
+    router._owner[r_free.rid] = 0           # white-box unpinned insert
+    cluster.engines[0].submit(r_free)
+    router.stats.dispatched[0] = router.stats.dispatched.get(0, 0) + 1
+    router._steal_queued()
+    assert router.stats.queued_steals == 1
+    assert r_free in cluster.engines[1].queue
+    assert r_pin in cluster.engines[0].queue
+    router._steal_queued()                  # only the pinned one is left
+    assert router.stats.queued_steals == 1
+
+
+def test_queued_steal_hysteresis_prevents_pingpong():
+    """Symmetric load: neither side is strictly costlier than the other
+    plus the candidate's own cost, so nothing moves — repeatedly."""
+    cluster = _cluster(2)
+    rng = _rng(16)
+    router = cluster.router
+    for idx in (0, 1):
+        cluster.submit(Request(rid=1 + idx, tenant=0,
+                               prompt=_prompt(rng, 16), max_new=10),
+                       engine=idx)
+    cluster.step()
+    for idx, rid in ((0, 40), (1, 41)):
+        r = Request(rid=rid, tenant=0, prompt=_prompt(rng, 16), max_new=4)
+        router._owner[rid] = idx
+        cluster.engines[idx].submit(r)
+        router.stats.dispatched[idx] = \
+            router.stats.dispatched.get(idx, 0) + 1
+    for _ in range(3):
+        router._steal_queued()
+    assert router.stats.queued_steals == 0
+    assert any(r.rid == 40 for r in cluster.engines[0].queue)
+    assert any(r.rid == 41 for r in cluster.engines[1].queue)
+
+
+# --------------------------------------------- crash re-dispatch (§14)
+
+
+def test_crash_redispatches_prestaged_request_exactly_once():
+    """Regression: a request pre-staged toward a crashed engine is
+    re-dispatched exactly once, its victim-side pre-stage written off
+    without crediting any live DMA lane."""
+    rng = _rng(17)
+    shared = _prompt(rng, 5 * PTOK)
+    cluster = _cluster(2, router_prestage=True)
+    _warm_prefix(cluster, shared, engine=1)
+    router = cluster.router
+    for i in range(2):                      # engine 0: cheaper backlog
+        cluster.submit(Request(rid=1 + i, tenant=0,
+                               prompt=_prompt(rng, 16), max_new=6),
+                       engine=0)
+    for i in range(2):                      # engine 1: longer backlog
+        cluster.submit(Request(rid=3 + i, tenant=0,
+                               prompt=_prompt(rng, 16), max_new=10),
+                       engine=1)
+    cluster.step()
+    r = Request(rid=60, tenant=1,
+                prompt=np.concatenate([shared, _prompt(rng, PTOK)]),
+                max_new=4, deadline_us=60_000.0)
+    cluster.submit(r)
+    router.dispatch()
+    assert router._owner[r.rid] == 0        # modeled cost picks engine 0
+    assert r in cluster.engines[0].queue
+    assert router._prestaged[r.rid] == 0
+    assert cluster.engines[0]._prestage_keys
+    dispatched_before = sum(router.stats.dispatched.values())
+    prestaged_before = router.stats.prestaged_requests
+    router._crash(0)
+    assert r.rid not in router._prestaged
+    assert r.rid not in router._owner
+    assert any(req.rid == r.rid for _, req in router.pending)
+    assert cluster.engines[0].stats.prestage_cancelled > 0
+    assert router.stats.prestage_cancels == 1
+    cluster.run_until_drained(max_steps=800)
+    assert r.done
+    cluster.check_invariants()
+    # Exactly one re-dispatch for every requeued victim (r + the two
+    # engine-0 pinned requests), all to the lone survivor; r pre-staged
+    # afresh exactly once at the survivor; no refund ever credited to a
+    # live lane.
+    assert sum(router.stats.dispatched.values()) == dispatched_before + 3
+    assert router._owner[r.rid] == 1
+    assert router.stats.prestaged_requests == prestaged_before + 1
+    assert cluster.engines[1].dma.stats["refunded_us"] == 0.0
+
+
+# ------------------------------------------------------ sim-side mirror
+
+
+def test_link_engine_occupancy_mirrors_lane_backlog():
+    cfg = SimConfig(n_engines=2, dma_channels=2, host_lanes=1,
+                    disk_lanes=1, duplex=True)
+    link = Link(cfg)
+    link._lanes_in[0][0] = 100.0
+    link._lanes_out[0][1] = 50.0
+    link._lanes_in[1][0] = 70.0
+    link._host_lanes[0] = 30.0
+    link._disk_lanes[0] = 20.0
+    assert link.engine_occupancy(0.0, engine=0) == pytest.approx(200.0)
+    assert link.engine_occupancy(0.0, engine=1) == pytest.approx(120.0)
+    assert link.engine_occupancy(60.0, engine=0) == pytest.approx(40.0)
+    # Monotone in added backlog.
+    link._lanes_in[0][1] = 25.0
+    assert link.engine_occupancy(0.0, engine=0) == pytest.approx(225.0)
+    # Half-duplex shares lane objects — no double counting.
+    half = Link(SimConfig(n_engines=1, dma_channels=1, duplex=False))
+    half._lanes_in[0][0] = 100.0
+    assert half.engine_occupancy(0.0) == pytest.approx(100.0)

@@ -318,3 +318,15 @@ def test_sharded_cache_random_ops_property():
             assert mgr.pool.occupancy() == 0.0
 
     run()
+
+
+def test_summary_pins_prestage_counters():
+    """Satellite: summary() must expose the pre-stage hit/wasted/
+    cancelled split (DESIGN.md §14) — and omit it entirely when no
+    pages were ever pre-staged, keeping older engines' lines stable."""
+    from repro.serving.engine import EngineStats
+
+    s = EngineStats(prestaged_pages=4, prestage_hits=2,
+                    prestage_wasted=1, prestage_cancelled=1)
+    assert "prestage 4 pages (2/1/1 hit/wasted/cancelled)" in s.summary()
+    assert "prestage" not in EngineStats().summary()
