@@ -19,6 +19,8 @@ Suites:
   spill    disk spill tier + write-back back-pressure     (§11)
   faults   crash recovery + spill integrity + degrade     (§12)
   fused-decode  fused gather-attend decode vs sync/async  (§13)
+  translation  radix walker + coalesced TLB: mosaic vs scattered,
+           walker-contention routing                      (§15)
   roofline dry-run roofline table, if dryrun_all.jsonl exists (deliv. g)
 
 Output: CSV-ish `key=value` rows per suite + a PASS/FAIL claim summary,
@@ -159,6 +161,9 @@ def main(argv=None):
         "fused-decode": lambda: (
             serving_bench.fused_decode_compare()
             + serving_bench.fused_kernel_compare()),
+        "translation": lambda: (
+            serving_bench.translation_radix_compare(n_access=n // 2)
+            + serving_bench.translation_router_compare()),
     }
     picked = (args.only.split(",") if args.only else list(suites))
     unknown = [p for p in picked if p not in suites and p != "roofline"]

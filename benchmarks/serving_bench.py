@@ -1611,3 +1611,197 @@ def fused_kernel_compare(B: int = 4, nblk: int = 8, reps: int = 3) -> List[Dict]
     assert bitwise, "all-resident fused kernel is not bitwise identical"
     assert partial_ok, "partially-staged fused kernel diverged from gather"
     return rows
+
+
+# ------------------------------------------- translation (radix walker)
+
+
+def translation_radix_compare(n_access: int = 2000) -> List[Dict]:
+    """Contiguity ⇒ cheap translation, measured (DESIGN.md §15).
+
+    The same trace geometry is allocated by the mosaic manager
+    (contiguity-preserving CoCoA) and the gpu-mmu baseline (interleaved
+    per-buffer allocation), then run under the radix walker with
+    subregion-coalesced TLB entries whose coverage is derived from each
+    allocator's *actual* frame map.  Claims:
+
+    * mosaic pays fewer walks and fewer total walk cycles than the
+      scattered baseline (one coalesced entry covers a contiguous run);
+    * coalescing itself is the mechanism: span-1 entries (per-page)
+      erase mosaic's advantage walk-for-walk;
+    * per-level walk caches cut DRAM accesses per walk;
+    * ``translation="flat"`` and radix with PWCs off + span 1 agree
+      bitwise (per-app cycles), so every pre-§15 claim is preserved.
+    """
+    from repro.core.tlb_sim import SimConfig, TranslationSim
+    from repro.core.workloads import build_workload, homogeneous_names
+
+    names = homogeneous_names("bfs", 2)
+    rows = []
+    st = {}
+    for label, kind, cfg_kw in (
+            ("mosaic-radix", "mosaic", {}),
+            ("gpu-mmu-radix", "gpu-mmu", {}),
+            ("mosaic-span1", "mosaic", {"coalesce_span": 1}),
+            ("gpu-mmu-nopwc", "gpu-mmu", {"pwc_entries": 0})):
+        traces, _ = build_workload(names, kind, seed=0, n_access=n_access)
+        sim = TranslationSim(
+            SimConfig(translation="radix", paging=False, **cfg_kw), traces)
+        res = sim.run()
+        st[label] = {
+            "walks": sim.total_walks(),
+            "walk_cycles": sim.total_walk_cycles(),
+            "dram": sim.walk_dram_accesses(),
+            "queue": sim.walker_queue_cycles(),
+            "pwc": sim.pwc_hit_rate(),
+            "ipc": float(sum(r.ipc for r in res)),
+        }
+        rows.append({
+            "bench": "translation", "mode": label,
+            "walks": st[label]["walks"],
+            "walk_cycles": round(st[label]["walk_cycles"], 1),
+            "dram_accesses": st[label]["dram"],
+            "walker_queue_cycles": round(st[label]["queue"], 1),
+            "pwc_hit": round(st[label]["pwc"], 3),
+            "l1_hit": round(sim.l1_hit_rate(), 3),
+            "ipc_sum": round(st[label]["ipc"], 4),
+        })
+
+    # Flat/radix parity: the degenerate radix config must reproduce the
+    # flat walker's timings bitwise (mode="base" exercises the flat
+    # base-page path; large arrays zeroed so entry budgets match).
+    parity_kw = dict(mode="base", paging=False,
+                     l1_large_entries=0, l2_large_entries=0)
+    tf, _ = build_workload(names, "gpu-mmu", seed=0, n_access=n_access)
+    sim_f = TranslationSim(SimConfig(translation="flat", **parity_kw), tf)
+    tr, _ = build_workload(names, "gpu-mmu", seed=0, n_access=n_access)
+    sim_r = TranslationSim(
+        SimConfig(translation="radix", pwc_entries=0, coalesce_span=1,
+                  **parity_kw), tr)
+    rf, rr = sim_f.run(), sim_r.run()
+    parity = (all(f.cycles == r.cycles and f.retired == r.retired
+                  for f, r in zip(rf, rr))
+              and sim_f.walker.walks == sim_r.total_walks())
+    rows.append({
+        "bench": "translation", "mode": "flat-parity",
+        "flat_walks": sim_f.walker.walks,
+        "radix_walks": sim_r.total_walks(),
+        "flat_cycles": round(float(sum(f.cycles for f in rf)), 1),
+        "radix_cycles": round(float(sum(r.cycles for r in rr)), 1),
+    })
+
+    rows.append({
+        "bench": "translation", "mode": "CLAIM",
+        "claim_translation_mosaic_fewer_walks":
+            bool(st["mosaic-radix"]["walks"]
+                 < st["gpu-mmu-radix"]["walks"]),
+        "claim_translation_mosaic_cheaper_walk_cycles":
+            bool(st["mosaic-radix"]["walk_cycles"]
+                 < st["gpu-mmu-radix"]["walk_cycles"]),
+        "claim_translation_coalescing_cuts_walks":
+            bool(st["mosaic-radix"]["walks"]
+                 < st["mosaic-span1"]["walks"]),
+        "claim_translation_pwc_cuts_dram_accesses":
+            bool(st["gpu-mmu-radix"]["dram"]
+                 < st["gpu-mmu-nopwc"]["dram"]),
+        "claim_translation_flat_radix_parity": bool(parity),
+    })
+    assert parity, "flat/radix parity broke — pre-§15 claims at risk"
+    return rows
+
+
+def run_translation_cluster(mode: str):
+    """Walker-contention routing scenario (DESIGN.md §15).
+
+    Engine 0 is pinned four long-context requests, engine 1 four
+    short-context ones with *identical* decode footprints (same
+    ``max_new``, same arrival).  The meter runs with a deliberately
+    small TLB (4/8 coalesced entries) so engine 0's big KV tables
+    capacity-thrash its radix walker every step — sustained walker
+    queueing — while engine 1's tables fit.  An unpinned probe wave
+    then arrives with ``max_new=1``: ``ceil(remaining/max_batch)``
+    stays under the critical path, so every pre-§15 cost term ties
+    exactly, and the dispatch is decided purely by the tie-break.
+    Without translation awareness that is the engine index (probes
+    pile onto the walker-saturated engine 0); with it, the walker
+    backlog term routes them to engine 1.  ``mode``: "aware",
+    "unaware", or "off" (meters off — the pre-§15 router verbatim).
+    """
+    from repro.serving.cluster import ServingCluster
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    cluster = ServingCluster(
+        cfg, geometry=GEO, n_engines=2, max_batch=8, max_seq=192,
+        manager_kind="gpu-mmu", seed=0, prefix_cache=False,
+        migrate=False, router_steal_queued=False,
+        decode_window_us=1000.0,
+        translation="off" if mode == "off" else "radix",
+        router_translation_aware=(mode != "unaware"),
+        translation_kw={"l1_entries": 4, "l2_entries": 8})
+    rng = np.random.default_rng(11)
+
+    def _req(rid, tokens, max_new, tenant=0):
+        return Request(rid=rid, tenant=tenant,
+                       prompt=rng.integers(0, cfg.vocab_size, tokens)
+                       .astype(np.int32), max_new=max_new)
+
+    heavy = [_req(i, 160, 8, tenant=0) for i in range(4)]
+    light = [_req(10 + i, 8, 8, tenant=1) for i in range(4)]
+    for r in heavy:
+        cluster.submit(r, engine=0)
+    for r in light:
+        cluster.submit(r, engine=1)
+    for _ in range(2):       # book walker time before the probes arrive
+        cluster.step()
+    probes = [_req(100 + i, 16, 1, tenant=2) for i in range(4)]
+    for r in probes:
+        cluster.submit(r)
+    cluster.run_until_drained(max_steps=600)
+    reqs = heavy + light + probes
+    assert all(r.done for r in reqs), "translation bench not drained"
+    cluster.check_invariants()
+    return cluster, reqs, probes
+
+
+def translation_router_compare() -> List[Dict]:
+    """Translation-aware routing A/B (DESIGN.md §15).
+
+    Claims: (a) tokens byte-identical across aware / unaware / off —
+    the walker term moves *placement*, never what decode computes;
+    (b) awareness routes the probe wave away from the walker-saturated
+    engine; (c) cluster-wide walker-queue interference drops.
+    """
+    rows = []
+    outs, probe_split, queue_cycles = {}, {}, {}
+    for mode in ("off", "unaware", "aware"):
+        cluster, reqs, probes = run_translation_cluster(mode)
+        outs[mode] = {r.rid: tuple(r.out) for r in reqs}
+        t = cluster.stats().totals
+        on1 = sum(1 for r in probes
+                  if cluster.router._owner.get(r.rid) == 1)
+        probe_split[mode] = on1
+        queue_cycles[mode] = t.translation_queue_cycles
+        rows.append({
+            "bench": "translation-router", "mode": mode,
+            "tok_per_s_cpu": round(t.tok_per_s(), 1),
+            "probes_to_engine1": on1,
+            "translation_lookups": t.translation_lookups,
+            "translation_walks": t.translation_walks,
+            "translation_queue_cycles":
+                round(t.translation_queue_cycles, 1),
+            "translation_us": round(t.translation_us, 1),
+            "dispatched": "/".join(
+                str(cluster.router.stats.dispatched.get(i, 0))
+                for i in range(2)),
+        })
+    identical = outs["off"] == outs["unaware"] == outs["aware"]
+    rows.append({
+        "bench": "translation-router", "mode": "CLAIM",
+        "claim_translation_tokens_identical": bool(identical),
+        "claim_translation_aware_routes_off_hot_walker":
+            bool(probe_split["aware"] > probe_split["unaware"]),
+        "claim_translation_aware_cuts_queue_cycles":
+            bool(queue_cycles["aware"] < queue_cycles["unaware"]),
+    })
+    assert identical, "translation metering changed model outputs!"
+    return rows

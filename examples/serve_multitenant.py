@@ -62,7 +62,8 @@ from repro.serving.engine import Request, ServingEngine
 def run(manager_kind: str, n_requests: int, seed: int,
         oversubscribe: float = 1.0, fault_mode: str = "async",
         shared_prefix: int = 0, prefix_cache: bool = True,
-        n_engines: int = 1, capacity_frames=None, spill: bool = True):
+        n_engines: int = 1, capacity_frames=None, spill: bool = True,
+        translation: str = "off"):
     cfg = get_smoke_config("qwen2.5-3b")
     geo = PoolGeometry(page_tokens=8, frame_pages=4, compact_threshold=0.4)
     if n_engines > 1:
@@ -71,7 +72,8 @@ def run(manager_kind: str, n_requests: int, seed: int,
             max_seq=128, manager_kind=manager_kind, seed=seed,
             oversubscription=oversubscribe, fault_mode=fault_mode,
             prefix_cache=prefix_cache,
-            capacity_frames=capacity_frames, spill=spill)
+            capacity_frames=capacity_frames, spill=spill,
+            translation=translation)
         eng = cluster            # same submit/run_until_drained surface
     else:
         cluster = None
@@ -79,7 +81,8 @@ def run(manager_kind: str, n_requests: int, seed: int,
                             manager_kind=manager_kind, seed=seed,
                             oversubscription=oversubscribe,
                             fault_mode=fault_mode,
-                            prefix_cache=prefix_cache)
+                            prefix_cache=prefix_cache,
+                            translation=translation)
     rng = np.random.default_rng(seed)
     system = rng.integers(0, cfg.vocab_size,
                           shared_prefix).astype(np.int32)
@@ -136,6 +139,12 @@ def main():
                     help="with --capacity-frames: hard-cap baseline — "
                          "evict over-cap prefix frames instead of "
                          "spilling them to disk")
+    ap.add_argument("--translation", choices=("off", "flat", "radix"),
+                    default="off",
+                    help="meter KV page translations through the "
+                         "coalesced-TLB + radix-walker model "
+                         "(DESIGN.md §15); prints a per-app "
+                         "translation-cycle summary line")
     args = ap.parse_args()
     if args.capacity_frames is not None and args.engines < 2:
         ap.error("--capacity-frames needs --engines >= 2 (the bounded "
@@ -149,7 +158,8 @@ def main():
                                prefix_cache=not args.no_prefix_cache,
                                n_engines=args.engines,
                                capacity_frames=args.capacity_frames,
-                               spill=not args.no_spill)
+                               spill=not args.no_spill,
+                               translation=args.translation)
         if args.engines > 1:
             cluster_stats = eng.stats()
             s = cluster_stats.totals
@@ -185,6 +195,11 @@ def main():
                 print(f"           {sub}")
         else:
             print(f"           {s.summary()}")
+        if args.translation != "off":
+            engines = eng.engines if args.engines > 1 else [eng]
+            for e in engines:
+                print(f"           engine[{e.engine_id}] "
+                      f"{e.translation_meter.summary()}")
         results[kind] = {r.rid: tuple(r.out) for r in reqs}
 
     same = results["mosaic"] == results["gpu-mmu"]

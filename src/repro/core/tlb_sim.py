@@ -60,6 +60,22 @@ class SimConfig:
     walker_slots: int = 64
     walk_levels: int = 4
     dram_latency: int = 160          # cycles per serialized walk access
+    # Translation model (DESIGN.md §15).  "flat" charges every TLB miss a
+    # constant ``walk_levels × dram_latency`` (the pre-§15 model, kept
+    # verbatim — bitwise-identical timings).  "radix" routes misses
+    # through :class:`repro.core.ptw.RadixWalker` — per-level page-walk
+    # caches skip already-cached upper levels — and replaces per-page TLB
+    # entries with subregion-coalesced ones whose reach is derived from
+    # the actual frame map the allocator produced (CoCoA's contiguity ⇒
+    # one entry covers a run of pages; the oracle ``coalesced`` bit is
+    # ignored).  With ``pwc_entries=0`` and ``coalesce_span=1`` radix is
+    # cycle-identical to flat (the parity the ptw tests pin).
+    translation: str = "flat"
+    pwc_entries: int = 64            # per-level walk-cache entries (0 = off)
+    pwc_latency: int = 2             # charged once when a PWC skips levels
+    coalesce_span: int = 32          # subregion size in base pages (1 = flat
+    #                                  per-page entries)
+    radix_bits: int = 9              # index bits per radix level
     # Issue model.  One trace access is a *macro-access*: a warp's full dwell
     # on one 4KB page (it issues `page_repeat` memory instructions into that
     # page — cache-line iteration).  ``AppTrace.gap_cycles`` is the dwell
@@ -161,7 +177,9 @@ class LRU:
     @property
     def rate(self) -> float:
         n = self.hits + self.misses
-        return self.hits / n if n else 1.0
+        # A never-touched cache has no hit rate; nan (not 1.0) keeps it
+        # from reading as a perfect cache in bench tables.
+        return self.hits / n if n else float("nan")
 
 
 class Walker:
@@ -394,6 +412,11 @@ class AppTrace:
     coalesced: np.ndarray
     gap_cycles: int
     name: str = "app"
+    # Full vpn→ppn map of the app's address space (UNMAPPED = -1), as the
+    # allocator produced it.  The radix model derives coalesced-entry
+    # coverage from it; None falls back to the map induced by the trace
+    # pairs themselves (sufficient for synthetic traces).
+    ppn_map: Optional[np.ndarray] = None
 
 
 # --------------------------------------------------------------------------- simulator
@@ -407,6 +430,12 @@ class AppResult:
     l1_hit: float
     l2_hit: float
     faults: int
+    # Radix-walker accounting (DESIGN.md §15); zeros/nan under the flat
+    # model, which only tracks walker-wide totals.
+    walks: int = 0
+    walk_cycles: float = 0.0         # latency past the L2 miss, summed
+    walk_queue_cycles: float = 0.0   # slot-queue wait (walker interference)
+    pwc_hit: float = float("nan")    # walk-cache hit rate of the app's walker
 
     @property
     def ipc(self) -> float:
@@ -417,6 +446,10 @@ class TranslationSim:
     """Event-driven multi-application TLB/paging simulator."""
 
     def __init__(self, cfg: SimConfig, apps: Sequence[AppTrace]):
+        if cfg.translation not in ("flat", "radix"):
+            raise ValueError(
+                f"SimConfig.translation must be 'flat' or 'radix', "
+                f"got {cfg.translation!r}")
         self.cfg = cfg
         self.apps = list(apps)
         n = len(self.apps)
@@ -427,6 +460,45 @@ class TranslationSim:
         self.l2_large = LRU(cfg.l2_large_entries)
         self.walker = Walker(cfg.walker_slots, cfg.walk_latency)
         self.link = Link(cfg, n_apps=n)
+        if cfg.translation == "radix":
+            from repro.core.ptw import (CoalescedTLB, RadixWalker,
+                                        subregion_entry)
+            self._mk_entry = subregion_entry
+            span = max(1, cfg.coalesce_span)
+            # One coalesced entry replaces a base+large entry pair: give
+            # the coalesced arrays the combined entry budget so radix
+            # isn't quietly handed extra capacity.
+            self.l1_co = [
+                CoalescedTLB(cfg.l1_base_entries + cfg.l1_large_entries,
+                             span)
+                for _ in range(n)]
+            self.l2_co = CoalescedTLB(
+                cfg.l2_base_entries + cfg.l2_large_entries, span)
+            # Per-engine walkers (the cluster tier gives each engine its
+            # own MMU, like its own link lanes); single-engine degenerates
+            # to one shared walker.  ``self.walker`` above still exists
+            # but never starts a walk in radix mode; ``self.walkers`` is
+            # the accounting surface.
+            E = max(1, cfg.n_engines)
+            self.walkers = [
+                RadixWalker(cfg.walker_slots, cfg.walk_levels,
+                            cfg.dram_latency, pwc_entries=cfg.pwc_entries,
+                            pwc_latency=cfg.pwc_latency, bits=cfg.radix_bits,
+                            n_apps=n)
+                for _ in range(E)]
+            # Per-app vpn→ppn maps drive coalesced-entry coverage: the
+            # allocator's own map when the trace carries one, else the
+            # map induced by the trace's (vpn, ppn) pairs.
+            self.ppn_maps: List[np.ndarray] = []
+            for tr in self.apps:
+                if tr.ppn_map is not None:
+                    self.ppn_maps.append(
+                        np.asarray(tr.ppn_map, dtype=np.int64))
+                else:
+                    size = int(tr.vpn.max()) + 1 if len(tr.vpn) else 1
+                    m = np.full(size, -1, dtype=np.int64)
+                    m[tr.vpn] = tr.ppn
+                    self.ppn_maps.append(m)
         # Per-app resident pages in LRU order (OrderedDict preserves the
         # set-like membership tests while supporting capacity eviction).
         self.resident: List[OrderedDict] = [OrderedDict() for _ in range(n)]
@@ -435,10 +507,60 @@ class TranslationSim:
 
     # -- one translation ---------------------------------------------------------
 
+    def _translate_radix(self, now: float, app: int, i: int) -> float:
+        """Radix path (DESIGN.md §15): subregion-coalesced L1/L2 lookup,
+        then a multi-level walk on the app's engine's walker.  Tags come
+        from the *virtual* subregion — the page-size ``mode`` and the
+        oracle ``coalesced`` bit are ignored; an entry's reach is however
+        much contiguity the allocator actually preserved in the frame
+        map."""
+        cfg = self.cfg
+        tr = self.apps[app]
+        vpn = int(tr.vpn[i])
+        span = max(1, cfg.coalesce_span)
+        sreg, off = divmod(vpn, span)
+        l1 = self.l1_co[app]
+        if l1.lookup(sreg, off) is not None:
+            return now + cfg.l1_latency
+        e = self.l2_co.lookup((app, sreg), off)
+        if e is not None:
+            l1.insert(sreg, e)
+            return now + cfg.l1_latency + cfg.l2_latency
+        t0 = now + cfg.l1_latency + cfg.l2_latency
+        walker = self.walkers[app % len(self.walkers)]
+        done = walker.walk(now, t0, app, vpn, (app, sreg))
+        entry = self._mk_entry(self.ppn_maps[app], vpn, span)
+        self.l2_co.insert((app, sreg), entry)
+        l1.insert(sreg, entry)
+        return done
+
+    def splinter(self, app: int, vpn: int,
+                 new_ppn: Optional[int] = None) -> None:
+        """CoCoA splintered/remapped one page: update the app's frame map
+        and invalidate only the touched subregion's coalesced entries.
+        PWCs are untouched — the upper-level radix entries still point at
+        the same intermediate tables (hardware-faithful selectivity the
+        ptw property tests pin)."""
+        if self.cfg.translation != "radix":
+            return
+        if new_ppn is not None:
+            m = self.ppn_maps[app]
+            if vpn >= len(m):
+                grown = np.full(vpn + 1, -1, dtype=np.int64)
+                grown[: len(m)] = m
+                self.ppn_maps[app] = m = grown
+            m[vpn] = new_ppn
+        sreg = vpn // max(1, self.cfg.coalesce_span)
+        self.l1_co[app].invalidate(sreg)
+        self.l2_co.invalidate((app, sreg))
+
     def translate(self, now: float, app: int, i: int) -> float:
         """Returns the cycle at which the translation (and fault) resolves."""
         cfg = self.cfg
         tr = self.apps[app]
+        if cfg.translation == "radix" and not cfg.ideal:
+            done = self._translate_radix(now, app, i)
+            return self._page_in(done, now, app, i)
         if cfg.mode == "large":
             large = True
         elif cfg.mode == "base":
@@ -468,11 +590,17 @@ class TranslationSim:
                 l2.insert((app, tag))
                 l1.insert(tag)
 
-        # Demand paging: first touch of a base page faults it in. (Transfers
-        # are always base-page-granular — Mosaic's point; the *translation*
-        # above may still be large.)  Under an HBM capacity cap, faulting
-        # past the cap first writes the LRU resident page back to host —
-        # outbound traffic on the (duplex) link.
+        return self._page_in(done, now, app, i)
+
+    def _page_in(self, done: float, now: float, app: int, i: int) -> float:
+        """Demand paging: first touch of a base page faults it in.
+        (Transfers are always base-page-granular — Mosaic's point; the
+        *translation* above may still be large.)  Under an HBM capacity
+        cap, faulting past the cap first writes the LRU resident page
+        back to host — outbound traffic on the (duplex) link.  Shared
+        verbatim by the flat and radix translation paths."""
+        cfg = self.cfg
+        tr = self.apps[app]
         if cfg.paging and not cfg.warm:
             ppn = int(tr.ppn[i])
             res = self.resident[app]
@@ -519,10 +647,22 @@ class TranslationSim:
                     events, (done + self.apps[a].gap_cycles, a, w, nxt)
                 )
         out = []
+        radix = cfg.translation == "radix"
         for a, tr in enumerate(self.apps):
-            l1 = self.l1_base[a], self.l1_large[a]
-            h = sum(x.hits for x in l1)
-            m = sum(x.misses for x in l1)
+            if radix:
+                h, m = self.l1_co[a].hits, self.l1_co[a].misses
+                wk = self.walkers[a % len(self.walkers)]
+                extra = dict(
+                    walks=wk.app_walks[a],
+                    walk_cycles=wk.app_walk_cycles[a],
+                    walk_queue_cycles=wk.app_queue_cycles[a],
+                    pwc_hit=wk.pwc_hit_rate(),
+                )
+            else:
+                l1 = self.l1_base[a], self.l1_large[a]
+                h = sum(x.hits for x in l1)
+                m = sum(x.misses for x in l1)
+                extra = {}
             out.append(
                 AppResult(
                     name=tr.name,
@@ -533,19 +673,59 @@ class TranslationSim:
                     # Fault *events* — equals the resident-set size only
                     # while hbm_pages_per_app is uncapped (no re-faults).
                     faults=self.fault_count[a],
+                    **extra,
                 )
             )
         return out
 
     def l2_hit_rate(self) -> float:
+        if self.cfg.translation == "radix":
+            return self.l2_co.hits / max(self.l2_co.hits
+                                         + self.l2_co.misses, 1)
         h = self.l2_base.hits + self.l2_large.hits
         m = self.l2_base.misses + self.l2_large.misses
         return h / max(h + m, 1)
 
     def l1_hit_rate(self) -> float:
+        if self.cfg.translation == "radix":
+            h = sum(t.hits for t in self.l1_co)
+            m = sum(t.misses for t in self.l1_co)
+            return h / max(h + m, 1)
         h = sum(x.hits for x in self.l1_base) + sum(x.hits for x in self.l1_large)
         m = sum(x.misses for x in self.l1_base) + sum(x.misses for x in self.l1_large)
         return h / max(h + m, 1)
+
+    # -- radix-only accounting (DESIGN.md §15) -------------------------------
+
+    def total_walks(self) -> int:
+        if self.cfg.translation == "radix":
+            return sum(w.walks for w in self.walkers)
+        return self.walker.walks
+
+    def total_walk_cycles(self) -> float:
+        """Summed per-app walk latency past the L2 miss (radix), or the
+        flat model's constant-cost equivalent."""
+        if self.cfg.translation == "radix":
+            return float(sum(sum(w.app_walk_cycles) for w in self.walkers))
+        return float(self.walker.walks * self.cfg.walk_latency
+                     + self.walker.stall_cycles)
+
+    def walker_queue_cycles(self) -> float:
+        if self.cfg.translation == "radix":
+            return float(sum(w.stall_cycles for w in self.walkers))
+        return float(self.walker.stall_cycles)
+
+    def pwc_hit_rate(self) -> float:
+        if self.cfg.translation != "radix":
+            return float("nan")
+        h = sum(p.hits for w in self.walkers for p in w.pwcs)
+        m = sum(p.misses for w in self.walkers for p in w.pwcs)
+        return h / (h + m) if h + m else float("nan")
+
+    def walk_dram_accesses(self) -> int:
+        if self.cfg.translation == "radix":
+            return sum(w.dram_accesses() for w in self.walkers)
+        return self.walker.walks * self.cfg.walk_levels
 
     def l1_hit_rate_micro(self, page_repeat: int = 24) -> float:
         """Per-memory-instruction L1 hit rate.

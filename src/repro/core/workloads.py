@@ -190,6 +190,9 @@ def build_workload(
                 coalesced=coalesced,
                 gap_cycles=p.gap_cycles,
                 name=p.name,
+                # The allocator's actual vpn→ppn map: the radix model
+                # derives coalesced-entry coverage from it (DESIGN.md §15).
+                ppn_map=ppn_of_vpn,
             )
         )
     return traces, mgr

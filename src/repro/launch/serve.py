@@ -50,6 +50,12 @@ def main():
     ap.add_argument("--no-migrate", action="store_true",
                     help="disable work-stealing migration between "
                          "replicas (with --engines > 1)")
+    ap.add_argument("--translation", default="off",
+                    choices=["off", "flat", "radix"],
+                    help="meter KV page translations through the "
+                         "coalesced-TLB + radix-walker model "
+                         "(DESIGN.md §15); prints a per-app "
+                         "translation-cycle summary line")
     args = ap.parse_args()
 
     from repro.serving.cluster import ServingCluster
@@ -66,11 +72,13 @@ def main():
                              max_seq=args.max_seq,
                              manager_kind=args.manager, seed=args.seed,
                              router_policy=args.router,
-                             migrate=not args.no_migrate)
+                             migrate=not args.no_migrate,
+                             translation=args.translation)
     else:
         eng = ServingEngine(cfg, geometry=geo, max_batch=args.max_batch,
                             max_seq=args.max_seq,
-                            manager_kind=args.manager, seed=args.seed)
+                            manager_kind=args.manager, seed=args.seed,
+                            translation=args.translation)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -93,6 +101,11 @@ def main():
               f"coalesced {eng.stats.coalesced_mean:.1%} | "
               f"CAC copies {eng.stats.compaction_copies} | "
               f"bloat {st.get('memory_bloat', 1.0):.2f}")
+    if args.translation != "off":
+        engines = eng.engines if args.engines > 1 else [eng]
+        for e in engines:
+            print(f"  engine[{e.engine_id}] "
+                  f"{e.translation_meter.summary()}")
     for r in reqs[:4]:
         print(f"  rid={r.rid} tenant={r.tenant} -> {r.out[:10]}")
 

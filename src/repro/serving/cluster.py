@@ -1226,6 +1226,7 @@ class ServingCluster:
                  router_cost_model: str = "modeled",
                  router_prestage: bool = False,
                  router_steal_queued: bool = True,
+                 router_translation_aware: bool = True,
                  capacity_frames: Optional[int] = None,
                  spill: bool = True, spill_dir: Optional[str] = None,
                  wb_queue_frames: int = 4, wb_lanes: int = 1,
@@ -1282,7 +1283,9 @@ class ServingCluster:
                                     injector=fault_injector,
                                     cost_model=router_cost_model,
                                     prestage=router_prestage,
-                                    steal_queued=router_steal_queued)
+                                    steal_queued=router_steal_queued,
+                                    translation_aware=(
+                                        router_translation_aware))
 
     # ------------------------------------------------------------- serving
 

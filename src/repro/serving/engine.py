@@ -206,6 +206,17 @@ class EngineStats:
     prestage_wasted: int = 0
     prestage_cancelled: int = 0
     prestage_refund_us: float = 0.0
+    # Translation meter (DESIGN.md §15): per-step KV page translations
+    # through the coalesced-TLB + radix-walker model.  Observational —
+    # decode timing and tokens are identical with the meter on or off —
+    # but the walker backlog is the router's translation-interference
+    # term, and translation_us is the modeled µs the lookups would cost.
+    translation_lookups: int = 0
+    translation_tlb_hits: int = 0
+    translation_walks: int = 0
+    translation_walk_cycles: float = 0.0
+    translation_queue_cycles: float = 0.0
+    translation_us: float = 0.0
 
     def note_deadline(self, priority: int, hit: bool) -> None:
         d = self.deadline_hits if hit else self.deadline_misses
@@ -296,6 +307,11 @@ class EngineStats:
             line += (f" | prestage {self.prestaged_pages} pages "
                      f"({self.prestage_hits}/{self.prestage_wasted}/"
                      f"{self.prestage_cancelled} hit/wasted/cancelled)")
+        if self.translation_lookups:
+            line += (f" | translation {self.translation_lookups} lookups, "
+                     f"{self.translation_walks} walks "
+                     f"({self.translation_us:.0f}us, queue "
+                     f"{self.translation_queue_cycles:.0f} cyc)")
         att = self.slo_attainment()
         if att is not None:
             tiers = sorted(set(self.deadline_hits) | set(self.deadline_misses),
@@ -325,7 +341,9 @@ class ServingEngine:
                  host: Optional[HostPageStore] = None,
                  prefix_index: Optional[PrefixIndex] = None,
                  engine_id: int = 0,
-                 injector=None):
+                 injector=None,
+                 translation: str = "off",
+                 translation_kw: Optional[dict] = None):
         # ValueError, not assert: configuration validation must survive
         # ``python -O`` (asserts compile away under optimization).
         if fault_mode not in ("async", "sync", "fused"):
@@ -342,6 +360,10 @@ class ServingEngine:
             raise ValueError(
                 f"victim_policy must be 'cost' or 'priority', "
                 f"got {victim_policy!r}")
+        if translation not in ("off", "flat", "radix"):
+            raise ValueError(
+                f"translation must be 'off', 'flat' or 'radix', "
+                f"got {translation!r}")
         self.cfg = cfg
         # Replica identity within a cluster (DESIGN.md §10): the host-tier
         # frame-lease protection domain and the reporting label.
@@ -455,6 +477,17 @@ class ServingEngine:
         # Consumed → prestage_hits, invalidated at retire/export →
         # prestage_wasted, retargeted by steal/crash → cancelled.
         self._prestage_keys: Dict[Key, int] = {}
+        # Translation meter (DESIGN.md §15): the decode loop feeds it the
+        # KV page tables each step's batch reads; subregion span defaults
+        # to the allocator's frame size — exactly the contiguity unit
+        # CoCoA preserves, so an unsplintered frame is one TLB entry.
+        self.translation = translation
+        self.translation_meter = None
+        if translation != "off":
+            from repro.core.ptw import TranslationMeter
+            self.translation_meter = TranslationMeter(
+                translation, span=max(1, geometry.frame_pages),
+                **(translation_kw or {}))
         self._clock_us = 0.0
         # Fused decode step state (DESIGN.md §13): DMA jobs whose pages
         # this step's kernel consumes (settled at the decode-window end,
@@ -1760,6 +1793,7 @@ class ServingEngine:
         # their disk-ready time: persist them before the completion
         # parks below ask park_allowed().
         self.host.pump(self._clock_us)
+        self._meter_translation(runnable)
         self._unstack_states(seqs, state)
         done_now = []
         for i, r in enumerate(runnable):
@@ -1778,6 +1812,11 @@ class ServingEngine:
             # Park the finished prompt's pages in the prefix cache before
             # the frames are freed / host copies dropped (DESIGN.md §8).
             self._park_prefix(r)
+            if self.translation_meter is not None:
+                # Address space retires with the sequence: its coalesced
+                # entries and in-flight MSHR keys go with it.
+                for s in range(self.cache.S):
+                    self.translation_meter.drop_space((r.rid, s))
             self.active.remove(r)
             self.cache.free(r.rid)
             self.states.pop(r.rid, None)
@@ -1797,8 +1836,48 @@ class ServingEngine:
         self.stats.wall_s += time.perf_counter() - t0
         return True
 
+    def _meter_translation(self, runnable) -> None:
+        """Run this step's packed KV page touches through the translation
+        meter (DESIGN.md §15).  Each (seq, shard) pair is a distinct
+        address space; latency is charged to the request's tenant.  Pure
+        observation — decode results and the engine clock are untouched."""
+        if self.translation_meter is None:
+            return
+        tables = []
+        for r in runnable:
+            for s, m in enumerate(self.cache.mgrs):
+                t = m.tables.get(r.rid)
+                if t is not None:
+                    tables.append(((r.rid, s), r.tenant, t.ppn))
+        d = self.translation_meter.step_access(self._clock_us, tables)
+        st = self.stats
+        st.translation_lookups += int(d["lookups"])
+        st.translation_tlb_hits += int(d["tlb_hits"])
+        st.translation_walks += int(d["walks"])
+        st.translation_walk_cycles += d["walk_cycles"]
+        st.translation_queue_cycles += d["queue_cycles"]
+        st.translation_us += self.translation_meter.cycles_us(
+            d["latency_cycles"])
+
+    def translation_backlog_us(self) -> float:
+        """Booked walker time beyond the engine clock, in modeled µs —
+        the translation-interference term the router's dispatch cost
+        charges.  0.0 when the meter is off (router claims unchanged)."""
+        if self.translation_meter is None:
+            return 0.0
+        return self.translation_meter.backlog_us(self._clock_us)
+
     def _run_compaction(self):
         ops = self.cache.drain_copy_ops()
+        if ops and self.translation_meter is not None:
+            # CAC remapped pages: splinter exactly the touched subregions
+            # out of the TLB (the selective shootdown the coalesced-entry
+            # model requires).  rmap already points at the destination.
+            for s, op in ops:
+                owner_vpn = self.cache.mgrs[s].rmap.get(op.dst_ppn)
+                if owner_vpn is not None:
+                    self.translation_meter.splinter(
+                        (owner_vpn[0], s), owner_vpn[1])
         if not ops or self.pools is None:
             return
         pps = self.cache.pages_per_shard

@@ -91,7 +91,8 @@ class RequestRouter:
                  policy: str = "slack", migrate: bool = True,
                  injector=None, cost_model: str = "modeled",
                  prestage: bool = False,
-                 steal_queued: bool = True) -> None:
+                 steal_queued: bool = True,
+                 translation_aware: bool = True) -> None:
         assert policy in ("slack", "fifo"), policy
         assert cost_model in ("modeled", "tokens"), cost_model
         assert engines
@@ -99,6 +100,11 @@ class RequestRouter:
         self.tier = tier
         self.policy = policy
         self.cost_model = cost_model
+        # Translation-interference term (DESIGN.md §15): charge each
+        # engine's booked walker backlog in the modeled dispatch cost.
+        # With the engines' translation meters off the term is 0.0, so
+        # this default changes nothing for meter-less clusters.
+        self.translation_aware = translation_aware
         # Proactive pre-staging of queued requests (DESIGN.md §14).
         self.prestage = prestage
         # Queued-steal is gated separately from preempted-steal: a queued
@@ -230,7 +236,10 @@ class RequestRouter:
           resume;
         * **host lanes** — the shared tier's write-back DMA backlog
           (identical for every engine, but it keeps absolute costs
-          honest for hysteresis thresholds).
+          honest for hysteresis thresholds);
+        * **walker backlog** — booked page-walk time on the engine's
+          MMU (DESIGN.md §15), when ``translation_aware`` and the
+          engine's translation meter is on.
 
         Monotone by construction: adding a request, a DMA booking, or a
         spilled page can only raise the cost.  The sim-side mirror is
@@ -259,6 +268,13 @@ class RequestRouter:
             wb = getattr(self.tier, "wb_dma", None)
             if wb is not None:
                 cost += max(0.0, wb.busy_until() - now)
+        if self.translation_aware:
+            # Walker backlog (DESIGN.md §15): a newcomer's translations
+            # queue behind the booked walks of the engine's MMU.  0.0
+            # when the engine's translation meter is off — the term is
+            # inert unless translation modeling was asked for.  Monotone:
+            # booking a walk can only raise the backlog.
+            cost += eng.translation_backlog_us()
         return cost
 
     def _load(self, eng: ServingEngine) -> float:

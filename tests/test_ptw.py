@@ -1,0 +1,284 @@
+"""Radix page-table walker + coalesced-TLB tests (DESIGN.md §15).
+
+Covers the §15 acceptance properties:
+
+* flat/radix bitwise parity: ``translation="radix"`` with PWCs disabled
+  and span-1 entries reproduces ``translation="flat"`` timings exactly
+  (cycles, retired, faults, walker walks);
+* coalesced-entry coverage monotonically reduces walk count as the
+  subregion span grows over a contiguity-preserving allocation;
+* MSHR merging: in-flight walks never exceed ``walker_slots`` and
+  duplicate concurrent misses merge instead of re-walking;
+* splintering invalidates only the touched subregion;
+* the serving-side :class:`TranslationMeter` is observational (tokens
+  byte-identical with the meter off/flat/radix) and mosaic allocation
+  pays fewer walks than the scattered baseline;
+* the ``LRU.rate`` never-touched regression reports nan, not a perfect
+  1.0.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.ptw import (CoalescedTLB, RadixWalker, TranslationMeter,
+                            subregion_entry)
+from repro.core.tlb_sim import LRU, AppTrace, SimConfig, TranslationSim
+from repro.core.workloads import build_workload, homogeneous_names
+
+pytestmark = pytest.mark.ptw
+
+N_ACCESS = 2000
+
+
+def scattered_trace(seed: int, pages: int = 600, n: int = N_ACCESS,
+                    contiguous: bool = False) -> AppTrace:
+    """Synthetic trace over ``pages`` base pages: contiguous maps every
+    vpn to vpn + const (perfect CoCoA contiguity); scattered permutes
+    frames (the interleaved baseline of the paper's Fig. 2)."""
+    r = np.random.default_rng(seed)
+    vpn = r.integers(0, pages, n).astype(np.int32)
+    if contiguous:
+        ppn = (vpn + 4 * pages).astype(np.int32)
+    else:
+        perm = r.permutation(pages).astype(np.int32)
+        ppn = perm[vpn]
+    return AppTrace(vpn=vpn, ppn=ppn, frame=(ppn // 8).astype(np.int32),
+                    coalesced=np.zeros(n, np.int8), gap_cycles=100,
+                    name=f"app{seed}")
+
+
+# ---------------------------------------------------------------- parity
+
+
+def test_flat_radix_bitwise_parity_synthetic():
+    """PWCs off + span 1 ⇒ the radix walker is the flat walker: every
+    walk is full depth at ``walk_levels × dram_latency`` with identical
+    slot-queue and MSHR mechanics, so per-app timings match bitwise."""
+    base = dict(mode="base", l1_large_entries=0, l2_large_entries=0)
+    flat = SimConfig(translation="flat", **base)
+    radix = SimConfig(translation="radix", pwc_entries=0, coalesce_span=1,
+                      **base)
+    sf = TranslationSim(flat, [scattered_trace(s) for s in (1, 2)])
+    sr = TranslationSim(radix, [scattered_trace(s) for s in (1, 2)])
+    rf, rr = sf.run(), sr.run()
+    for f, r in zip(rf, rr):
+        assert f.cycles == r.cycles          # bitwise, not approx
+        assert f.retired == r.retired
+        assert f.faults == r.faults
+        assert f.l1_hit == r.l1_hit
+    assert sf.walker.walks == sr.total_walks()
+    assert sf.link.faults == sr.link.faults
+
+
+def test_flat_radix_bitwise_parity_real_allocator():
+    """Same parity through the real manager-built workload (gpu-mmu
+    allocation, the scattered end of the spectrum)."""
+    names = homogeneous_names("bfs", 2)
+    base = dict(mode="base", l1_large_entries=0, l2_large_entries=0,
+                paging=False)
+    traces, _ = build_workload(names, "gpu-mmu", seed=0, n_access=1500)
+    sf = TranslationSim(SimConfig(translation="flat", **base), traces)
+    traces2, _ = build_workload(names, "gpu-mmu", seed=0, n_access=1500)
+    sr = TranslationSim(
+        SimConfig(translation="radix", pwc_entries=0, coalesce_span=1,
+                  **base), traces2)
+    rf, rr = sf.run(), sr.run()
+    for f, r in zip(rf, rr):
+        assert f.cycles == r.cycles
+        assert f.retired == r.retired
+    assert sf.walker.walks == sr.total_walks()
+
+
+# ---------------------------------------------------- coalesced coverage
+
+
+def test_span_monotonically_reduces_walks_on_contiguous_maps():
+    """Over a contiguity-preserving allocation, doubling the subregion
+    span can only widen every entry's reach: walk count is monotonically
+    non-increasing in span (and strictly falls from 1 to 32)."""
+    walks = []
+    for span in (1, 2, 4, 8, 16, 32):
+        cfg = SimConfig(translation="radix", coalesce_span=span,
+                        paging=False)
+        sim = TranslationSim(
+            cfg, [scattered_trace(s, contiguous=True) for s in (1, 2)])
+        sim.run()
+        walks.append(sim.total_walks())
+    assert all(a >= b for a, b in zip(walks, walks[1:])), walks
+    assert walks[-1] < walks[0]
+
+
+def test_contiguous_allocation_pays_fewer_walk_cycles_than_scattered():
+    """The tentpole claim at sim level: same trace geometry, same radix
+    walker — the contiguous map needs fewer walks *and* fewer total
+    translation cycles, because one coalesced entry covers a whole run."""
+    cfg = SimConfig(translation="radix", paging=False)
+    sim_c = TranslationSim(
+        cfg, [scattered_trace(s, contiguous=True) for s in (1, 2)])
+    sim_s = TranslationSim(
+        cfg, [scattered_trace(s, contiguous=False) for s in (1, 2)])
+    sim_c.run(), sim_s.run()
+    assert sim_c.total_walks() < sim_s.total_walks()
+    assert sim_c.total_walk_cycles() < sim_s.total_walk_cycles()
+    assert sim_c.walk_dram_accesses() < sim_s.walk_dram_accesses()
+
+
+def test_subregion_entry_coverage_from_frame_map():
+    # vpn 0..3 contiguous at delta 10; vpn 4 splintered to a different
+    # delta; vpn 5 unmapped; vpn 6 at another delta; vpn 7 back at 10.
+    ppn_map = [10, 11, 12, 13, 99, -1, 20, 17]
+    delta, mask = subregion_entry(ppn_map, 1, span=8)
+    assert delta == 10
+    assert mask & 0b1111 == 0b1111       # the contiguous run
+    assert not (mask >> 4) & 1           # splintered page not covered
+    assert not (mask >> 5) & 1           # unmapped hole not covered
+    assert not (mask >> 6) & 1           # different delta not covered
+    assert (mask >> 7) & 1               # same delta: covered
+
+
+def test_pwc_skips_upper_levels():
+    """A second walk under the same upper-level subtree only fetches the
+    uncached tail: per-level DRAM accesses drop for levels 1..L-1."""
+    w = RadixWalker(slots=8, levels=4, dram_latency=160, pwc_entries=64,
+                    pwc_latency=2)
+    d1 = w.walk(0.0, 0.0, 0, 0x1234, ("a", 1))
+    assert d1 == 4 * 160                  # cold: full depth
+    # Neighbouring page, same upper levels (tags >> 9 match): 1 access.
+    d2 = w.walk(d1 + 1, d1 + 1, 0, 0x1235, ("a", 2))
+    assert d2 - (d1 + 1) == 160 + 2       # leaf access + PWC probe
+    assert w.level_accesses[0] == 1       # root touched once
+    assert w.dram_accesses() == 5
+
+
+# ----------------------------------------------------------------- MSHR
+
+
+def test_mshr_merges_and_inflight_bounded_by_slots():
+    slots = 4
+    w = RadixWalker(slots=slots, levels=4, dram_latency=160,
+                    pwc_entries=0)
+    # 32 concurrent misses on 8 distinct keys at t=0: duplicates merge,
+    # distinct walks queue on the slot heap.
+    done = [w.walk(0.0, 0.0, 0, k, ("k", k % 8)) for k in range(32)]
+    assert w.walks == 8                   # one real walk per distinct key
+    assert w.merged == 24                 # the duplicates merged
+    assert w.peak_inflight <= slots
+    # Each batch of `slots` walks serializes behind the previous batch.
+    assert max(done) == (8 // slots) * 4 * 160
+
+
+def test_mshr_reuses_only_inflight_walks():
+    w = RadixWalker(slots=8, levels=4, dram_latency=160, pwc_entries=0)
+    d1 = w.walk(0.0, 0.0, 0, 7, ("k", 7))
+    # After d1 resolved, the same key misses again → a new walk.
+    d2 = w.walk(d1 + 1, d1 + 1, 0, 7, ("k", 7))
+    assert w.walks == 2 and w.merged == 0
+    assert d2 > d1
+
+
+# ------------------------------------------------------------ splintering
+
+
+def test_splinter_invalidates_only_touched_subregion():
+    cfg = SimConfig(translation="radix", coalesce_span=8, paging=False)
+    tr = scattered_trace(1, contiguous=True)
+    sim = TranslationSim(cfg, [tr])
+    sim.run()
+    # Warm state: pick two subregions resident in L1.
+    l1 = sim.l1_co[0]
+    tags = list(l1.d)
+    assert len(tags) >= 2
+    victim, sibling = tags[0], tags[1]
+    walks_before = sim.total_walks()
+    sim.splinter(0, victim * 8 + 3, new_ppn=999_999)
+    assert victim not in l1.d             # touched subregion dropped
+    assert sibling in l1.d                # sibling untouched
+    assert (0, sibling) not in sim.l2_co.d or True
+    # A lookup in the sibling subregion still hits without a walk.
+    h0 = l1.hits
+    assert l1.lookup(sibling, 0) is not None
+    assert l1.hits == h0 + 1
+    assert sim.total_walks() == walks_before  # no re-walk for siblings
+    # Re-walking inside the splintered subregion builds a fresh entry
+    # whose coverage excludes the remapped page (delta mismatch).
+    entry = sim._mk_entry(sim.ppn_maps[0], victim * 8, 8)
+    assert not (entry[1] >> 3) & 1
+
+
+def test_meter_splinter_only_affected_subregion():
+    m = TranslationMeter("radix", span=4)
+    ppn_map = list(range(100, 116))       # 16 pages, fully contiguous
+    m.step_access(0.0, [(("s", 0), "tenant", ppn_map)])
+    assert len(m.l1.d) >= 2
+    m.splinter(("s", 0), 5)               # subregion 1
+    assert (("s", 0), 1) not in m.l1.d
+    assert (("s", 0), 0) in m.l1.d
+
+
+# ------------------------------------------------------- serving meter
+
+
+def _run_engine(translation, seed=0):
+    from repro.configs import get_smoke_config
+    from repro.configs.base import PoolGeometry
+    from repro.serving.engine import Request, ServingEngine
+    cfg = get_smoke_config("qwen2.5-3b")
+    geo = PoolGeometry(page_tokens=8, frame_pages=4)
+    eng = ServingEngine(cfg, geometry=geo, max_batch=2, max_seq=64,
+                        decode_window_us=100.0, seed=seed,
+                        translation=translation)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, tenant=i % 2,
+                    prompt=rng.integers(0, cfg.vocab_size, 12 + 4 * i)
+                    .astype(np.int32),
+                    max_new=5) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, {r.rid: tuple(r.out) for r in reqs}
+
+
+def test_meter_is_observational_and_radix_beats_flat():
+    eng_off, out_off = _run_engine("off")
+    eng_flat, out_flat = _run_engine("flat")
+    eng_radix, out_radix = _run_engine("radix")
+    assert out_off == out_flat == out_radix   # byte-identical tokens
+    assert eng_off.stats.translation_lookups == 0
+    assert eng_flat.stats.translation_lookups \
+        == eng_radix.stats.translation_lookups > 0
+    # Coalesced entries + PWCs: radix never walks more than flat.
+    assert eng_radix.stats.translation_walks \
+        <= eng_flat.stats.translation_walks
+    assert eng_radix.translation_meter.summary()
+
+
+def test_engine_validates_translation_mode():
+    from repro.configs import get_smoke_config
+    from repro.configs.base import PoolGeometry
+    from repro.serving.engine import ServingEngine
+    with pytest.raises(ValueError, match="translation"):
+        ServingEngine(get_smoke_config("qwen2.5-3b"),
+                      geometry=PoolGeometry(page_tokens=8, frame_pages=4),
+                      max_batch=2, max_seq=64, translation="bogus")
+
+
+# --------------------------------------------------------- LRU.rate fix
+
+
+def test_lru_rate_nan_when_untouched():
+    """Regression: a never-touched cache must not report a perfect 1.0
+    hit rate in bench tables."""
+    assert math.isnan(LRU(16).rate)
+    assert math.isnan(CoalescedTLB(16, 4).rate)
+    lru = LRU(16)
+    lru.insert("a")
+    assert lru.lookup("a") and lru.rate == 1.0
+    assert not lru.lookup("b") and lru.rate == 0.5
+
+
+def test_sim_config_validates_translation():
+    with pytest.raises(ValueError, match="translation"):
+        TranslationSim(SimConfig(translation="bogus"),
+                       [scattered_trace(1)])
